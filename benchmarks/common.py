@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: result dir, timers, markdown tables."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+RESULTS = Path("experiments/results")
+
+
+def save(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2, default=float))
+
+
+def md_table(headers, rows) -> str:
+    out = ["| " + " | ".join(headers) + " |", "|" + "|".join("---" for _ in headers) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def time_call(fn, *args, reps=3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    try:
+        import jax
+
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / reps * 1e6  # us

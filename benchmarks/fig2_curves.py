@@ -1,0 +1,45 @@
+"""Paper Fig. 2: graphical comparison of sqrt outputs over the FP16 range.
+
+Writes a CSV (input, exact, esas, cwaha4, cwaha8, e2afs) decimated to ~2k
+points, plus summary stats of curve deviation per octave."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import RESULTS, save
+from repro.core import get_unit
+
+
+def run():
+    exps = np.arange(1, 31, dtype=np.uint32)
+    mans = np.arange(0, 1024, 8, dtype=np.uint32)  # decimate mantissa 8x
+    bits = ((exps[:, None] << 10) | mans[None, :]).reshape(-1).astype(np.uint16)
+    x = bits.view(np.float16)
+    xj = jnp.asarray(x)
+
+    cols = {"input": x.astype(np.float64), "exact": np.sqrt(x.astype(np.float64))}
+    units = ("esas", "cwaha4", "cwaha8", "e2afs")
+    for u in units:
+        cols[u] = np.asarray(get_unit(u).sqrt(xj)).astype(np.float64)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    header = ",".join(cols)
+    rows = np.stack([cols[k] for k in cols], axis=1)
+    np.savetxt(RESULTS / "fig2_curves.csv", rows, delimiter=",", header=header, comments="")
+
+    # per-design max deviation over the plotted range (the "step variations")
+    stats = {
+        u: {
+            "max_dev": float(np.abs(cols[u] - cols["exact"]).max()),
+            "mean_dev": float(np.abs(cols[u] - cols["exact"]).mean()),
+        }
+        for u in units
+    }
+    save("fig2_stats", stats)
+    print("\n== Fig 2 (curve deviation vs exact; CSV at experiments/results/fig2_curves.csv) ==")
+    for u, s in stats.items():
+        print(f"  {u:8s} max_dev={s['max_dev']:.3f} mean_dev={s['mean_dev']:.4f}")
+    order = sorted(units, key=lambda u: stats[u]["mean_dev"])
+    print(f"  closest tracking (paper: cwaha8 ~ e2afs < esas < cwaha4): {order}")
+    return stats

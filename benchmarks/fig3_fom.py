@@ -1,0 +1,45 @@
+"""Paper Fig. 3: Figures of Merit.
+
+The paper plots FoM1/FoM2 ("jointly capturing accuracy and energy
+performance", higher better) without printing formulas; we adopt the
+standard composites and report both with our hw proxies AND with the paper's
+measured PDP so the ranking is checkable both ways:
+
+    FoM1 = NF / (PDP * MED)      FoM2 = NF / (PDP * MRED)
+
+NF normalizes the best design to 1.0."""
+from __future__ import annotations
+
+from benchmarks.common import md_table, save
+from repro.core import error_metrics, get_unit
+from repro.core.hw_model import PAPER_TABLE3, calibrated_table
+
+
+def run():
+    designs = ("esas", "cwaha4", "cwaha8", "e2afs")
+    met = {d: error_metrics(get_unit(d).sqrt) for d in designs}
+    prox = calibrated_table()
+
+    def foms(pdp_src):
+        f1 = {d: 1.0 / (pdp_src[d] * met[d].med) for d in designs}
+        f2 = {d: 1.0 / (pdp_src[d] * met[d].mred) for d in designs}
+        n1, n2 = max(f1.values()), max(f2.values())
+        return {d: f1[d] / n1 for d in designs}, {d: f2[d] / n2 for d in designs}
+
+    paper_pdp = {d: PAPER_TABLE3[d]["pdp_pj"] for d in designs}
+    proxy_pdp = {d: prox[d]["pdp_pj_proxy"] for d in designs}
+    f1p, f2p = foms(paper_pdp)
+    f1x, f2x = foms(proxy_pdp)
+
+    rows = [
+        [d, f"{f1p[d]:.3f}", f"{f2p[d]:.3f}", f"{f1x[d]:.3f}", f"{f2x[d]:.3f}"]
+        for d in designs
+    ]
+    print("\n== Fig 3 (FoMs, normalized; higher = better) ==")
+    print(md_table(["design", "FoM1 (paper PDP)", "FoM2 (paper PDP)",
+                    "FoM1 (proxy PDP)", "FoM2 (proxy PDP)"], rows))
+    best = max(designs, key=lambda d: f1p[d])
+    print(f"  highest FoM1/FoM2 with paper PDP: {best} (paper claims e2afs)")
+    save("fig3_fom", {"paper_pdp": {"fom1": f1p, "fom2": f2p},
+                      "proxy_pdp": {"fom1": f1x, "fom2": f2x}})
+    return f1p, f2p

@@ -1,0 +1,31 @@
+"""Kernel micro-benchmarks (CPU interpret mode — correctness-side timings
+only; the TPU perf story lives in the roofline/§Perf analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import md_table, save, time_call
+from repro.core import get_unit
+
+
+def run():
+    x = jnp.abs(jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)) + 0.1
+    rows = []
+    payload = {}
+    for name in ("exact", "e2afs", "esas", "cwaha8"):
+        unit = get_unit(name)
+        f = jax.jit(unit.sqrt)
+        us = time_call(f, x)
+        rows.append([f"sqrt[{name}]", f"{us:.0f}"])
+        payload[f"sqrt_{name}"] = us
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import ref_rmsnorm
+
+    scale = jnp.zeros((1024,))
+    rows.append(["rmsnorm[pallas-interpret]", f"{time_call(rmsnorm, x, scale):.0f}"])
+    rows.append(["rmsnorm[ref]", f"{time_call(jax.jit(ref_rmsnorm), x, scale):.0f}"])
+    print("\n== Kernel microbench (us/call, CPU; informational) ==")
+    print(md_table(["kernel", "us/call"], rows))
+    save("kernels_bench", payload)
+    return payload

@@ -1,0 +1,95 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell: the three terms, the dominant one, MODEL_FLOPS
+(6·N·D train / 2·N_active·tokens decode-prefill) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPS."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from benchmarks.common import md_table, save
+
+DRYRUN = Path("experiments/dryrun")
+
+PEAK_FLOPS = 197e12
+_PARAMS_CACHE = {}
+
+
+def _param_counts(arch: str):
+    """(total, active) params from the abstract init."""
+    if arch in _PARAMS_CACHE:
+        return _PARAMS_CACHE[arch]
+    from repro.configs import get_config
+    from repro.models import lm
+
+    cfg = get_config(arch)
+    params, _ = lm.init(cfg, jax.random.key(0), abstract=True)
+    total = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    active = total
+    if cfg.moe is not None:
+        leaves = jax.tree.flatten_with_path(params)[0]
+        expert = sum(
+            int(np.prod(p.shape))
+            for path, p in leaves
+            if any("moe" == getattr(k, "key", None) for k in path)
+        )
+        active = total - expert + int(expert * cfg.moe.top_k / cfg.moe.n_experts)
+    _PARAMS_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """Global model flops for the cell's step."""
+    total, active = _param_counts(arch)
+    kind, seq, batch = shape["kind"], shape["seq_len"], shape["global_batch"]
+    if kind == "train":
+        return 6.0 * active * seq * batch
+    if kind == "prefill":
+        return 2.0 * active * seq * batch
+    return 2.0 * active * batch  # decode: one token per row
+
+
+def run(mesh: str = "single"):
+    from repro.configs.shapes import SHAPES
+
+    rows = []
+    payload = {}
+    for f in sorted(DRYRUN.glob(f"*_{mesh}.json")):
+        rec = json.loads(f.read_text())
+        arch, shape = rec["arch"], rec["shape"]
+        key = f"{arch}/{shape}"
+        if rec["status"] != "ok":
+            rows.append([arch, shape, rec["status"], "-", "-", "-", "-", "-", "-"])
+            payload[key] = {"status": rec["status"]}
+            continue
+        r = rec["roofline"]
+        case = SHAPES[shape]
+        mf = model_flops(arch, {"kind": case.kind, "seq_len": case.seq_len,
+                                "global_batch": case.global_batch})
+        hlo_global = rec["hlo_flops_per_device"] * rec["n_chips"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0  # roofline fraction
+        payload[key] = {
+            "status": "ok", "terms": r, "model_flops": mf,
+            "useful_ratio": useful, "roofline_fraction": frac,
+            "memory_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+        }
+        rows.append([
+            arch, shape, r["dominant"].replace("_s", ""),
+            f"{r['compute_s']:.3f}", f"{r['memory_s']:.3f}", f"{r['collective_s']:.3f}",
+            f"{useful:.2f}", f"{frac:.3f}",
+            f"{rec['memory']['peak_estimate_bytes'] / 2**30:.1f}",
+        ])
+    print(f"\n== Roofline table ({mesh}-pod; seconds per step per chip) ==")
+    print(md_table(
+        ["arch", "shape", "bound", "compute_s", "memory_s", "collective_s",
+         "useful", "roofline_frac", "GiB/chip"],
+        rows,
+    ))
+    save(f"roofline_{mesh}", payload)
+    return payload

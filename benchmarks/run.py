@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3_accuracy,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = (
+    "table3_accuracy",  # paper Table 3, error metrics (exhaustive 2^16)
+    "table3_hw",        # paper Table 3, hardware cost proxies
+    "fig2_curves",      # paper Fig 2, graphical analysis
+    "fig3_fom",         # paper Fig 3, figures of merit
+    "table4_sobel",     # paper Table 4, Sobel PSNR/SSIM
+    "fig5_kmeans",      # paper Fig 5, K-means color quantization
+    "kernels_bench",    # kernel microbench (informational)
+    "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else SUITES
+
+    failures = []
+    for name in wanted:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+            print(f"[done] {name} ({time.time() - t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+            failures.append(name)
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+    print("\nAll benchmarks complete. JSON artifacts: experiments/results/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table 3 (right half): exhaustive FP16 error metrics, all designs."""
+from __future__ import annotations
+
+from benchmarks.common import md_table, save
+from repro.core import error_metrics, get_unit
+
+PAPER = {
+    "esas": (0.4625, 1.7508, 0.1807, 2.041, 12.33),
+    "cwaha4": (0.5436, 2.1823, 0.2124, 2.079, 11.34),
+    "cwaha8": (0.2891, 1.1436, 0.1129, 0.899, 8.68),
+    "e2afs": (0.4024, 1.5264, 0.1572, 1.414, 9.98),
+}
+
+
+def run():
+    rows = []
+    payload = {}
+    for name in ("esas", "cwaha4", "cwaha8", "e2afs"):
+        m = error_metrics(get_unit(name).sqrt)
+        p = PAPER[name]
+        payload[name] = {"ours": m.as_dict(), "paper": p}
+        rows.append(
+            [
+                name,
+                f"{m.med:.4f} ({p[0]})",
+                f"{m.mred * 100:.4f} ({p[1]})",
+                f"{m.nmed * 100:.4f} ({p[2]})",
+                f"{m.mse:.3f} ({p[3]})",
+                f"{m.ed_max:.2f} ({p[4]})",
+            ]
+        )
+    # E2AFS-R (beyond-paper rsqrt)
+    mr = error_metrics(get_unit("e2afs").rsqrt, reference="rsqrt")
+    payload["e2afs_rsqrt"] = {"ours": mr.as_dict()}
+    rows.append(
+        ["e2afs-R (rsqrt)", f"{mr.med:.4f}", f"{mr.mred * 100:.4f}", f"{mr.nmed * 100:.4f}",
+         f"{mr.mse:.3f}", f"{mr.ed_max:.2f}"]
+    )
+    table = md_table(
+        ["design", "MED (paper)", "MRED e-2 (paper)", "NMED e-2 (paper)", "MSE (paper)", "EDmax (paper)"],
+        rows,
+    )
+    save("table3_accuracy", payload)
+    print("\n== Table 3 (accuracy, ours vs paper) ==")
+    print(table)
+    return payload

@@ -1,0 +1,28 @@
+"""Paper Table 3 (left half): unit-gate hardware cost proxies."""
+from __future__ import annotations
+
+from benchmarks.common import md_table, save
+from repro.core.hw_model import PAPER_TABLE3, calibrated_table, cost
+
+
+def run():
+    t = calibrated_table()
+    rows = []
+    for name in ("esas", "cwaha4", "cwaha8", "e2afs"):
+        c, p = t[name], PAPER_TABLE3[name]
+        rows.append(
+            [
+                name,
+                f"{c['luts_proxy']:.0f} ({p['luts']})",
+                f"{c['dp_mw_proxy']:.2f} ({p['dp_mw']})",
+                f"{c['cpd_ns_proxy']:.2f} ({p['cpd_ns']})",
+                f"{c['pdp_pj_proxy']:.1f} ({p['pdp_pj']})",
+            ]
+        )
+    table = md_table(["design", "LUT proxy (paper)", "DP mW proxy (paper)",
+                      "CPD ns proxy (paper)", "PDP pJ proxy (paper)"], rows)
+    save("table3_hw", {"proxies": t, "paper": PAPER_TABLE3, "raw": {n: cost(n) for n in t}})
+    print("\n== Table 3 (hardware proxies, calibrated on the E2AFS row) ==")
+    print(table)
+    print("(baseline netlists are reconstructions; see DESIGN.md §5-6)")
+    return t

@@ -1,0 +1,44 @@
+"""Quickstart: the paper's approximate sqrt as a drop-in unit.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import error_metrics, get_unit
+
+
+def main():
+    # 1. The unit itself — paper Table 2's worked example, bit-exact
+    x = jnp.asarray([np.uint16(0x785A).view(np.float16)])  # 2^15 * (1+90/1024)
+    unit = get_unit("e2afs")
+    y = unit.sqrt(x)
+    print(f"E2AFS sqrt(0x785A={float(x[0])}) = {float(y[0])}  (paper: 196.125)")
+
+    # 2. Any dtype, any shape — the datapath generalizes to bf16/fp32
+    for dt in (jnp.float16, jnp.bfloat16, jnp.float32):
+        v = jnp.asarray([2.0, 1000.0, 0.0625], dt)
+        s = unit.sqrt(v)
+        print(f"  {np.dtype(dt).name:9s} sqrt({np.asarray(v)}) ~= {np.asarray(s)}")
+
+    # 3. Exhaustive FP16 error metrics (paper Table 3)
+    m = error_metrics(unit.sqrt)
+    print(f"\nTable-3 metrics: {m}")
+    print("paper          : MED=0.4024 MRED=1.5264e-2 NMED=0.1572e-2 MSE=1.414 EDmax=9.98")
+
+    # 4. E2AFS-R: the rsqrt datapath used by RMSNorm/Adam in the framework
+    mr = error_metrics(unit.rsqrt, reference="rsqrt")
+    print(f"E2AFS-R rsqrt  : {mr}")
+
+    # 5. Plug it into a model layer
+    from repro.layers.norms import rmsnorm
+
+    h = jnp.ones((2, 8)) * 3.0
+    out_exact = rmsnorm(jnp.zeros(8), h, sqrt_unit="exact")
+    out_e2afs = rmsnorm(jnp.zeros(8), h, sqrt_unit="e2afs")
+    rel = float(jnp.abs(out_exact - out_e2afs).max() / jnp.abs(out_exact).max())
+    print(f"\nRMSNorm(e2afs) vs RMSNorm(exact): max rel dev {rel:.4f}")
+
+
+if __name__ == "__main__":
+    main()

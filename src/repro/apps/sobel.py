@@ -1,0 +1,36 @@
+"""Paper §4.1: Sobel edge detection with approximate square rooters.
+
+The gradient magnitude G = sqrt(Gx^2 + Gy^2) runs through a selected
+SqrtUnit; fidelity is measured as PSNR/SSIM of the approximate edge map
+against the exact-sqrt edge map (Table 4's protocol)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.metrics_img import psnr, ssim
+from repro.kernels.sobel.ref import ref_sobel
+
+__all__ = ["edge_map", "evaluate_units"]
+
+
+def edge_map(img: np.ndarray, sqrt_unit: str, *, use_kernel: bool = False) -> np.ndarray:
+    """(H, W) [0,255] -> normalized edge map in [0,255]."""
+    x = jnp.asarray(img, jnp.float32)
+    if use_kernel and sqrt_unit == "e2afs":
+        from repro.kernels.sobel.ops import sobel_magnitude
+
+        mag = sobel_magnitude(x)
+    else:
+        mag = ref_sobel(x, sqrt_unit=sqrt_unit)
+    mag = np.asarray(mag, np.float64)
+    return np.clip(mag / (4.0 * 255.0) * 255.0, 0, 255)  # max |G| = 4*2*255/2
+
+
+def evaluate_units(img: np.ndarray, units=("esas", "cwaha4", "cwaha8", "e2afs")):
+    exact = edge_map(img, "exact")
+    out = {}
+    for u in units:
+        approx = edge_map(img, u)
+        out[u] = {"psnr": psnr(exact, approx), "ssim": ssim(exact, approx)}
+    return out

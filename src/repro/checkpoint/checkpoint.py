@@ -1,0 +1,133 @@
+"""Sharded checkpointing with atomic commit, async writer, and elastic
+restore (resharding on load).
+
+Format: one directory per step containing one .npy per pytree leaf plus a
+manifest (tree structure + leaf paths + dtypes/shapes).  Writes go to
+``<dir>/tmp-<step>`` and are renamed to ``<dir>/step-<step>`` only after the
+manifest lands — a crashed writer can never leave a half-readable step
+(restart-safety).  Restore takes target shardings, so a job restarted on a
+*different* mesh (elastic scaling) re-shards transparently: leaves are read
+on host and device_put with the new NamedShardings."""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+
+_pending: list = []
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        name = "_".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        items.append((name, leaf))
+    return items, treedef
+
+
+def save(ckpt_dir, step: int, tree) -> Path:
+    """Synchronous atomic save. Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f"tmp-{step}"
+    final = ckpt_dir / f"step-{step}"
+    if final.exists():
+        return final
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    items, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": []}
+    for name, leaf in items:
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"{name}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append(
+            {"name": name, "file": fname, "shape": arr.shape, "dtype": str(arr.dtype)}
+        )
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    os.replace(tmp, final)  # atomic commit
+    return final
+
+
+def save_async(ckpt_dir, step: int, tree) -> threading.Thread:
+    """Async save off the training critical path.  The tree is snapshotted
+    to host synchronously (cheap vs training step), the disk write happens in
+    a daemon thread.  ``wait_pending()`` joins all outstanding writers."""
+    items, _ = _flatten_with_paths(tree)
+    host_items = [(n, np.asarray(jax.device_get(x))) for n, x in items]
+
+    def _write():
+        ckpt_dir_p = Path(ckpt_dir)
+        tmp = ckpt_dir_p / f"tmp-{step}"
+        final = ckpt_dir_p / f"step-{step}"
+        if final.exists():
+            return
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": []}
+        for name, arr in host_items:
+            np.save(tmp / f"{name}.npy", arr)
+            manifest["leaves"].append(
+                {"name": name, "file": f"{name}.npy", "shape": arr.shape, "dtype": str(arr.dtype)}
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        os.replace(tmp, final)
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    _pending.append(t)
+    return t
+
+
+def wait_pending():
+    while _pending:
+        _pending.pop().join()
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step-") and (p / "manifest.json").exists():
+            steps.append(int(p.name.split("-", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, like_tree, shardings=None):
+    """Restore into the structure of ``like_tree`` (arrays or
+    ShapeDtypeStructs).  ``shardings``: matching tree of NamedShardings for
+    elastic resharding; None leaves arrays on the default device."""
+    final = Path(ckpt_dir) / f"step-{step}"
+    manifest = json.loads((final / "manifest.json").read_text())
+    by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
+
+    items, treedef = _flatten_with_paths(like_tree)
+    sh_flat = None
+    if shardings is not None:
+        sh_flat = jax.tree.flatten(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
+        )[0]
+    leaves = []
+    for i, (name, like) in enumerate(items):
+        arr = np.load(final / by_name[name]["file"])
+        assert tuple(arr.shape) == tuple(like.shape), (name, arr.shape, like.shape)
+        if sh_flat is not None:
+            leaves.append(jax.device_put(arr, sh_flat[i]))
+        else:
+            leaves.append(jax.device_put(arr.astype(like.dtype)))
+    return treedef.unflatten(leaves)

@@ -1,0 +1,12 @@
+"""Assigned-architecture registry: ``get_config("qwen3-4b")`` etc."""
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.shapes import SHAPES, input_specs, shape_applies
+
+__all__ = [
+    "ARCH_IDS",
+    "get_config",
+    "get_smoke_config",
+    "SHAPES",
+    "input_specs",
+    "shape_applies",
+]

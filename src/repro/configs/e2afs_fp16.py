@@ -1,0 +1,25 @@
+"""The paper's own "architecture": the FP16 approximate square-root unit.
+
+Not an LM — this config drives the paper-fidelity benchmarks (Table 2/3,
+Fig 2/3, Sobel, K-means).  Exposed through the same registry so launchers
+can select it with --arch e2afs-fp16."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class E2AFSConfig:
+    name: str = "e2afs-fp16"
+    sqrt_unit: str = "e2afs"
+    baselines: tuple = ("esas", "cwaha4", "cwaha8")
+    fmt: str = "fp16"
+
+    def validate(self):
+        return self
+
+
+def config():
+    return E2AFSConfig().validate()
+
+
+def smoke_config():
+    return config()

@@ -1,0 +1,88 @@
+"""Assigned input-shape sets and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shape policy (DESIGN.md §7):
+  * train_4k / prefill_32k: all 10 archs (lower train_step / forward)
+  * decode_32k: all 10 (serve_step; whisper uses a synthetic 32k decoder KV)
+  * long_500k: sub-quadratic-capable archs only (SSM / hybrid / windowed /
+    mostly-local); pure full-attention archs report skip(full-attn).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "ShapeCase", "input_specs", "shape_applies", "cache_len_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# smoke-scale variants of the same four cases (CPU-runnable; batch 4 divides
+# the 2x2[x2] smoke meshes)
+SMOKE_SHAPES = {
+    "train_4k": ShapeCase("train_4k", 32, 4, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 64, 4, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 64, 4, "decode"),
+    "long_500k": ShapeCase("long_500k", 128, 1, "decode"),
+}
+
+
+def shape_applies(cfg: ModelConfig, shape_name: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; otherwise a skip reason."""
+    if shape_name == "long_500k" and not cfg.long_context_capable:
+        return "skip(full-attn)"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, case: ShapeCase) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train/prefill: the forward batch (+labels for train).
+    For decode: the (b, 1) token batch; the KV cache is built separately by
+    the launcher (see repro.launch.dryrun) because its sharding is distinct.
+    """
+    b, s = case.global_batch, case.seq_len
+    tok = jnp.int32
+
+    if case.kind in ("train", "prefill"):
+        batch = {}
+        s_text = s
+        if cfg.vision_tokens:
+            s_text = s - cfg.vision_tokens
+            batch["vision"] = _sds((b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = _sds((b, s_text), tok)
+        if cfg.kind == "encdec":
+            batch["audio"] = _sds((b, cfg.encoder.n_ctx, cfg.d_model), jnp.bfloat16)
+        if case.kind == "train":
+            batch["labels"] = _sds((b, s_text), tok)
+            batch["loss_mask"] = _sds((b, s_text), jnp.float32)
+        return batch
+
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": _sds((b, 1), tok)}
+
+
+def cache_len_for(cfg: ModelConfig, case: ShapeCase) -> int:
+    assert case.kind == "decode"
+    return case.seq_len

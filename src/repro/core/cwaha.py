@@ -1,0 +1,63 @@
+"""Reconstructed CWAHA-k baselines (Ratnaparkhi & Rao, ISVLSI 2023 [12]).
+
+"Cluster-Wise Approximation for Hardware implementation of Arithmetic
+functions": the mantissa interval is split into k uniform clusters and each
+cluster outputs a constant (a small ROM indexed by the top log2(k) mantissa
+bits, separate tables for even/odd exponent parity).  See DESIGN.md §6 — this
+piecewise-constant reading is quantitatively consistent with every reported
+CWAHA number (error roughly halves from k=4 to k=8, the tiny LUT count of
+CWAHA-4, and Fig. 2's visible output "steps").
+
+Cluster constants derived by tools/fit_constants.py: the in-cluster median of
+the exact target (MED-optimal for a monotone function), quantized to Q10.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import FloatFormat, format_of
+
+__all__ = ["cwaha_sqrt", "CWAHA_TABLES"]
+
+# Q10 tables from tools/fit_constants.py.
+CWAHA_TABLES = {
+    4: {
+        "even": (1086, 1201, 1305, 1402),
+        "odd": (1536, 1698, 1846, 1983),
+    },
+    8: {
+        "even": (1055, 1116, 1173, 1228, 1280, 1330, 1378, 1425),
+        "odd": (1492, 1578, 1659, 1736, 1810, 1881, 1949, 2015),
+    },
+}
+
+
+def _cwaha_fields(exp, man, fmt: FloatFormat, k: int):
+    one = fmt.one
+    r = exp - fmt.bias
+    odd = r & 1
+    half = jnp.where(odd == 1, (r - 1) >> 1, r >> 1)
+    exp_out = half + fmt.bias
+
+    idx_bits = k.bit_length() - 1  # log2(k)
+    idx = man >> (fmt.man_bits - idx_bits)
+
+    def table(vals):
+        scaled = [int(round(v * fmt.one / 1024)) for v in vals]
+        return jnp.take(jnp.asarray(scaled, jnp.int32), idx)
+
+    res = jnp.where(odd == 1, table(CWAHA_TABLES[k]["odd"]), table(CWAHA_TABLES[k]["even"]))
+    man_out = res - one
+    return exp_out, man_out
+
+
+def cwaha_sqrt(x: jax.Array, k: int = 8, *, ftz: bool = True) -> jax.Array:
+    if k not in CWAHA_TABLES:
+        raise ValueError(f"CWAHA variants: {sorted(CWAHA_TABLES)}; got {k}")
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp_out, man_out = _cwaha_fields(exp, man, fmt, k)
+    result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+    return numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)

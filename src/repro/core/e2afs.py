@@ -1,0 +1,172 @@
+"""E2AFS: the paper's multiplier-free approximate floating-point square rooter.
+
+Implements the dual-level approximation of Goyal et al. (Table 1) as a
+bit-level integer datapath — shifts, adds and two 1-bit decisions (exponent
+parity, mantissa MSB).  For ``M = 2^r (1+Y)``:
+
+    r even, Y < 0.5 :  2^{r/2}      * (1 + Y/2)
+    r even, Y >= 0.5:  2^{r/2}      * (1 + Y/2 - 0.045)
+    r odd,  Y < 0.5 :  2^{(r-1)/2}  * 1.5 * (1 + Y/4)
+    r odd,  Y >= 0.5:  2^{(r-1)/2}  * 1.5 * (1 + (Y + 0.3333)/4)
+
+Hardware mapping (all Qm fixed point, m = mantissa bits):
+  * ``1.5 * x``        ->  ``x + (x >> 1)``
+  * ``Y/2``, ``Y/4``   ->  ``man >> 1``, ``man >> 2``   (truncation, as Table 2)
+  * ``-0.045``         ->  subtract ``round(0.045 * 2^m)``   (46 for FP16)
+  * ``+0.3333``        ->  add ``round(0.3333 * 2^m)``       (341 for FP16)
+  * region select      ->  exponent LSB (parity) + mantissa MSB
+
+The FP16 instantiation is bit-exact against the paper's Table 2 worked
+example (0x785A -> 0 10110 1000100001); see tests/core/test_bitexact.py.
+bf16/fp32 instantiations use the identical datapath with constants quantized
+to their mantissa grid (beyond-paper generalization, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import FloatFormat, format_of
+
+__all__ = ["e2afs_sqrt", "e2afs_rsqrt", "E2AFS_CONSTANTS"]
+
+# Q-grid region constants, per paper eqs. (3)/(4).
+_C_EVEN_HI = 0.045  # subtracted when r even, Y >= 0.5
+_C_ODD_HI = 0.3333  # added to Y (before >>2) when r odd, Y >= 0.5
+
+E2AFS_CONSTANTS = {"c_even_hi": _C_EVEN_HI, "c_odd_hi": _C_ODD_HI}
+
+
+def _e2afs_mantissa_exponent(exp, man, fmt: FloatFormat):
+    """Shared integer datapath: biased exp + mantissa -> output fields.
+
+    Returns (exp_out, man_out) for the normal-input case; specials handled by
+    the caller.  All values int32.
+    """
+    one = fmt.one
+    c_even = fmt.q(_C_EVEN_HI)
+    c_odd = fmt.q(_C_ODD_HI)
+
+    r = exp - fmt.bias
+    odd = r & 1  # two's-complement LSB: correct parity for negative r too
+    y_hi = man >> (fmt.man_bits - 1)  # mantissa MSB: Y >= 0.5
+
+    # --- exponent path: r/2 (even) or (r-1)/2 (odd); arithmetic shift is exact
+    # for both because the numerator is even in each case.
+    half = jnp.where(odd == 1, (r - 1) >> 1, r >> 1)
+    exp_out = half + fmt.bias
+
+    # --- mantissa path (Qm integers, truncating shifts) ---
+    # even r:  1 + Y/2  [- 0.045 when Y >= 0.5]
+    even_res = one + (man >> 1) - jnp.where(y_hi == 1, c_even, 0)
+    # odd r :  1.5 * (1 + (Y [+ 0.3333])/4)  via  t + (t >> 1)
+    man_adj = jnp.where(y_hi == 1, man + c_odd, man)
+    t = one + (man_adj >> 2)
+    odd_res = t + (t >> 1)
+
+    res = jnp.where(odd == 1, odd_res, even_res)
+
+    # For FP16 the datapath provably stays in [one, 2*one) — max odd result is
+    # 1365 + 682 = 2047 (asserted exhaustively in tests).  Other formats get a
+    # one-step renormalizer for safety (synthesizes to a mux + increment).
+    ovf = res >> (fmt.man_bits + 1)
+    res = jnp.where(ovf == 1, res >> 1, res)
+    exp_out = exp_out + ovf
+
+    man_out = res - one
+    return exp_out, man_out
+
+
+def e2afs_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+    """Approximate sqrt via the E2AFS datapath.  Same dtype in/out."""
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp_out, man_out = _e2afs_mantissa_exponent(exp, man, fmt)
+    result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+    return numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)
+
+
+# ---------------------------------------------------------------------------
+# E2AFS-R: reciprocal square root by the same design methodology.
+#
+# Beyond-paper extension (DESIGN.md §3): RMSNorm/QK-norm consume rsqrt, and a
+# division is as multiplier-hostile as a multiply, so we derive a direct
+# rsqrt datapath with the paper's recipe — binomial first term, parity trick
+# (2^{-1/2} ~= 0.75 = 1 - 1/4, overestimation error +0.0429 cancelled by the
+# mantissa term), breakpoint at the mantissa MSB, and MED-minimizing constant
+# compensation found by grid search over shift-add slopes (tools/fit_constants.py).
+#
+# For M = 2^r (1+Y):
+#   r even:  2^{-r/2}       * g(Y)
+#   r odd :  2^{-(r+1)/2} * 1.5 * g'(Y)        (1.5 realized as x + x>>1)
+# with g, g' piecewise-linear in Y using slopes that are sums of two
+# power-of-two shifts.  Fitted constants (Q-grid fractions) below.
+# ---------------------------------------------------------------------------
+
+# Fitted by tools/fit_constants.py (grid search at Q10 per the paper's
+# methodology; sweep log in EXPERIMENTS.md).  The sqrt(2) factor of the odd
+# path and the even path's renormalization are folded into the intercepts, so
+# the datapath is a pure 4-region PWL — same adder count as E2AFS-sqrt minus
+# the *1.5 stage:
+#   even r: mantissa target 2*(1+Y)^{-1/2} in (1.414, 2];  out_exp = -r/2 - 1
+#   odd  r: mantissa target sqrt(2)*(1+Y)^{-1/2} in (1, 1.414]; out_exp = -(r+1)/2
+#   region            slope (shift form)           intercept (Q10)
+#   even, Y<0.5   : -(Y>>1) - (Y>>2)  = -0.75  Y    2030
+#   even, Y>=0.5  : -(Y>>2) - (Y>>3)  = -0.375 Y    1835
+#   odd,  Y<0.5   : -(Y>>1) - (Y>>8)  = -0.504 Y    1428
+#   odd,  Y>=0.5  : -(Y>>2) - (Y>>4)  = -0.3125Y    1336
+_RSQRT_REGIONS = {
+    # (odd, y_hi) -> (shift_a, shift_b, intercept_q10)
+    (0, 0): (1, 2, 2030),
+    (0, 1): (2, 3, 1835),
+    (1, 0): (1, 8, 1428),
+    (1, 1): (2, 4, 1336),
+}
+
+
+def _rsqrt_mantissa_exponent(exp, man, fmt: FloatFormat):
+    one = fmt.one
+    r = exp - fmt.bias
+    odd = r & 1
+    y_hi = man >> (fmt.man_bits - 1)
+
+    # exponent: even -> -r/2 - 1 (renorm folded); odd -> -(r+1)/2 (exact:
+    # r+1 even).  Arithmetic shifts are exact for both.
+    exp_out = jnp.where(odd == 1, -((r + 1) >> 1), -(r >> 1) - 1) + fmt.bias
+
+    def region(key):
+        a, b, c_q10 = _RSQRT_REGIONS[key]
+        # rescale the Q10 intercept onto this format's mantissa grid
+        c = int(round(c_q10 * fmt.one / 1024))
+        return c - (man >> a) - (man >> b)
+
+    res = jnp.where(
+        odd == 1,
+        jnp.where(y_hi == 1, region((1, 1)), region((1, 0))),
+        jnp.where(y_hi == 1, region((0, 1)), region((0, 0))),
+    )
+
+    # Odd path near Y -> 1 can dip just below 1.0 (true value is exactly 1.0);
+    # renormalize into [one, 2*one).  Even path is provably in range.
+    under = (res < one).astype(jnp.int32)
+    res = jnp.where(under == 1, res << 1, res)
+    exp_out = exp_out - under
+
+    man_out = (res - one) & fmt.man_mask
+    return exp_out, man_out
+
+
+def e2afs_rsqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+    """Approximate rsqrt via the E2AFS-R datapath (beyond-paper extension)."""
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp_out, man_out = _rsqrt_mantissa_exponent(exp, man, fmt)
+    result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+    out = numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)
+    # rsqrt-specific specials override: rsqrt(0) = +inf, rsqrt(inf) = 0.
+    is_zero = (exp == 0) & (man == 0)
+    is_inf = (exp == fmt.exp_mask) & (man == 0) & (sign == 0)
+    out = jnp.where(is_zero, jnp.array(jnp.inf, out.dtype), out)
+    out = jnp.where(is_inf, jnp.zeros_like(out), out)
+    return out

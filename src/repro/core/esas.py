@@ -1,0 +1,48 @@
+"""Reconstructed ESAS baseline (Ratnaparkhi & Rao, DSD 2022 [10]).
+
+The original paper is unavailable offline; per DESIGN.md §6 we reconstruct it
+from its description ("exponent series based approximate square root") as the
+*level-1-only* approximation — the first two binomial-series terms plus the
+parity trick, with no second-level breakpoint compensation:
+
+    r even:  2^{r/2}     * (1 + Y/2)
+    r odd :  2^{(r-1)/2} * 1.5 * (1 + Y/4)
+
+E2AFS (this paper) == ESAS + the second-level corrections, which matches the
+papers' lineage (same group refines the series approach).  Our measured
+metrics for this reconstruction are reported next to the paper's Table 3 row
+in EXPERIMENTS.md; orderings (E2AFS more accurate and cheaper) hold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import FloatFormat, format_of
+
+__all__ = ["esas_sqrt"]
+
+
+def _esas_fields(exp, man, fmt: FloatFormat):
+    one = fmt.one
+    r = exp - fmt.bias
+    odd = r & 1
+    half = jnp.where(odd == 1, (r - 1) >> 1, r >> 1)
+    exp_out = half + fmt.bias
+
+    even_res = one + (man >> 1)
+    t = one + (man >> 2)
+    odd_res = t + (t >> 1)
+    res = jnp.where(odd == 1, odd_res, even_res)
+    # max odd result: t = one + (one-1)>>2 -> 1.25*one; res = 1.875*one < 2*one
+    man_out = res - one
+    return exp_out, man_out
+
+
+def esas_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp_out, man_out = _esas_fields(exp, man, fmt)
+    result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+    return numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)

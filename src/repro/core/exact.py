@@ -1,0 +1,17 @@
+"""Exact sqrt/rsqrt behind the SqrtUnit interface (the paper's reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["exact_sqrt", "exact_rsqrt"]
+
+
+def exact_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+    del ftz
+    return jnp.sqrt(x)
+
+
+def exact_rsqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+    del ftz
+    return jax.lax.rsqrt(x)

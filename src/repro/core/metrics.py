@@ -1,0 +1,83 @@
+"""Error metric suite from the paper (Liang/Han/Lombardi metrics).
+
+MED, MRED, NMED, MSE, EDmax computed by exhaustive simulation over the full
+positive-normal input space of a 16-bit format (the paper's "complete 2^n
+input space" evaluation), or over a sampled grid for fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.numerics import FP16, FloatFormat
+
+__all__ = ["ErrorMetrics", "error_metrics", "positive_normal_values"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorMetrics:
+    med: float
+    mred: float
+    nmed: float
+    mse: float
+    ed_max: float
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        return (
+            f"MED={self.med:.4f} MRED={self.mred * 100:.4f}e-2 "
+            f"NMED={self.nmed * 100:.4f}e-2 MSE={self.mse:.3f} EDmax={self.ed_max:.2f}"
+        )
+
+
+def positive_normal_values(fmt: FloatFormat = FP16) -> np.ndarray:
+    """All positive normal values of a 16-bit format, as that dtype."""
+    if fmt.total_bits != 16:
+        raise ValueError("exhaustive domain only for 16-bit formats")
+    exps = np.arange(1, fmt.exp_mask, dtype=np.uint16)  # normals: 1..emax-1
+    mans = np.arange(fmt.one, dtype=np.uint16)
+    bits = (exps[:, None].astype(np.uint32) << fmt.man_bits) | mans[None, :]
+    bits = bits.reshape(-1).astype(np.uint16)
+    return bits.view(np.dtype(fmt.dtype.name if fmt.name != "bf16" else "uint16"))
+
+
+def error_metrics(
+    approx_fn: Callable,
+    fmt: FloatFormat = FP16,
+    *,
+    reference: str = "sqrt",
+) -> ErrorMetrics:
+    """Exhaustive error metrics of ``approx_fn`` against the exact function.
+
+    ``approx_fn`` maps an array of ``fmt.dtype`` to the same dtype.  Errors are
+    evaluated in float64, per the paper: ED = |approx - exact|.
+    """
+    if fmt is not FP16:
+        raise NotImplementedError("paper metrics are defined on FP16")
+    exps = np.arange(1, fmt.exp_mask, dtype=np.uint32)
+    mans = np.arange(fmt.one, dtype=np.uint32)
+    bits = ((exps[:, None] << fmt.man_bits) | mans[None, :]).reshape(-1)
+    x = bits.astype(np.uint16).view(np.float16)
+
+    y_app = np.asarray(approx_fn(jnp.asarray(x))).astype(np.float64)
+    xf = x.astype(np.float64)
+    if reference == "sqrt":
+        y_ref = np.sqrt(xf)
+    elif reference == "rsqrt":
+        y_ref = 1.0 / np.sqrt(xf)
+    else:
+        raise ValueError(reference)
+
+    ed = np.abs(y_app - y_ref)
+    return ErrorMetrics(
+        med=float(ed.mean()),
+        mred=float((ed / y_ref).mean()),
+        nmed=float(ed.mean() / y_ref.max()),
+        mse=float((ed**2).mean()),
+        ed_max=float(ed.max()),
+    )

@@ -1,0 +1,131 @@
+"""IEEE binary float format descriptors and bit-level helpers.
+
+The E2AFS datapath (and the reconstructed baselines) operate on the raw
+exponent/mantissa fields of a binary float.  The paper targets FP16; the
+framework generalizes the identical datapath to bf16/fp32 (see DESIGN.md §3,
+"Changed assumptions").  All helpers are jit/vmap-safe pure functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FloatFormat",
+    "FP16",
+    "BF16",
+    "FP32",
+    "format_of",
+    "decompose",
+    "compose",
+    "apply_specials",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    """Descriptor for an IEEE-754-style binary format."""
+
+    name: str
+    dtype: jnp.dtype
+    uint_dtype: jnp.dtype
+    exp_bits: int
+    man_bits: int
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def exp_mask(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    @property
+    def one(self) -> int:
+        """Implicit leading one in fixed-point mantissa domain (Q<man_bits>)."""
+        return 1 << self.man_bits
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    def q(self, value: float) -> int:
+        """Quantize a real constant to this format's fixed-point mantissa grid."""
+        return int(round(value * self.one))
+
+
+FP16 = FloatFormat("fp16", jnp.dtype(jnp.float16), jnp.dtype(jnp.uint16), 5, 10)
+BF16 = FloatFormat("bf16", jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.uint16), 8, 7)
+FP32 = FloatFormat("fp32", jnp.dtype(jnp.float32), jnp.dtype(jnp.uint32), 8, 23)
+
+_BY_DTYPE = {f.dtype: f for f in (FP16, BF16, FP32)}
+
+
+def format_of(dtype) -> FloatFormat:
+    dtype = jnp.dtype(dtype)
+    try:
+        return _BY_DTYPE[dtype]
+    except KeyError:
+        raise ValueError(
+            f"approx sqrt units support fp16/bf16/fp32, got {dtype}"
+        ) from None
+
+
+def decompose(x: jax.Array, fmt: FloatFormat):
+    """Split a float array into (sign, biased_exp, mantissa) int32 fields."""
+    bits = jax.lax.bitcast_convert_type(x, fmt.uint_dtype).astype(jnp.int32)
+    sign = (bits >> (fmt.exp_bits + fmt.man_bits)) & 1
+    exp = (bits >> fmt.man_bits) & fmt.exp_mask
+    man = bits & fmt.man_mask
+    return sign, exp, man
+
+
+def compose(sign, exp, man, fmt: FloatFormat) -> jax.Array:
+    """Assemble int32 (sign, biased_exp, mantissa) fields back into a float."""
+    bits = (sign << (fmt.exp_bits + fmt.man_bits)) | (exp << fmt.man_bits) | man
+    return jax.lax.bitcast_convert_type(bits.astype(fmt.uint_dtype), fmt.dtype)
+
+
+def apply_specials(result, x, sign, exp, man, fmt: FloatFormat, *, ftz: bool = True):
+    """IEEE edge-case policy shared by every approximate unit (DESIGN.md §10).
+
+    +0 -> +0, +inf -> +inf, NaN -> NaN, negative -> NaN.  Subnormal inputs are
+    flushed to zero when ``ftz`` (hardware-faithful default); otherwise they fall
+    through to the caller-provided ``result`` (callers that support gradual
+    underflow pre-normalize).
+    """
+    zero = jnp.zeros_like(result)
+    nan = jnp.full_like(result, jnp.nan)
+    inf = jnp.full_like(result, jnp.inf)
+
+    is_exp_min = exp == 0
+    is_exp_max = exp == fmt.exp_mask
+    is_zero = is_exp_min & (man == 0)
+    is_sub = is_exp_min & (man != 0)
+    is_inf = is_exp_max & (man == 0)
+    is_nan = is_exp_max & (man != 0)
+    is_neg = (sign == 1) & ~is_zero
+
+    out = result
+    if ftz:
+        out = jnp.where(is_sub, zero, out)
+    out = jnp.where(is_zero, zero, out)
+    out = jnp.where(is_inf, inf, out)
+    out = jnp.where(is_nan | is_neg, nan, out)
+    return out
+
+
+def all_bit_patterns(fmt: FloatFormat) -> np.ndarray:
+    """Every bit pattern of the format as a numpy float array (fp16/bf16 only)."""
+    n = fmt.total_bits
+    if n > 16:
+        raise ValueError("exhaustive enumeration only for 16-bit formats")
+    bits = np.arange(1 << n, dtype=np.uint16)
+    return bits

@@ -1,0 +1,71 @@
+"""SqrtUnit registry — the framework-facing interface to the paper's technique.
+
+Every sqrt/rsqrt consumer in the framework (norm layers, optimizer, gradient
+clipping, application pipelines) takes a ``sqrt_unit`` name and resolves it
+here, so the approximation is a first-class, config-selectable feature:
+
+    unit = get_unit("e2afs")
+    y = unit.sqrt(x)          # elementwise, fp16/bf16/fp32
+    z = unit.rsqrt(x)
+
+``rsqrt`` uses the dedicated E2AFS-R datapath for "e2afs"; baselines without a
+native rsqrt datapath (esas, cwaha) compose sqrt with an exact reciprocal
+(documented — they are sqrt-only designs in their papers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import cwaha, e2afs, esas, exact
+
+__all__ = ["SqrtUnit", "get_unit", "available_units"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SqrtUnit:
+    name: str
+    _sqrt: Callable
+    _rsqrt: Optional[Callable] = None  # native rsqrt datapath if available
+    description: str = ""
+
+    def sqrt(self, x: jax.Array, **kw) -> jax.Array:
+        return self._sqrt(x, **kw)
+
+    def rsqrt(self, x: jax.Array, **kw) -> jax.Array:
+        if self._rsqrt is not None:
+            return self._rsqrt(x, **kw)
+        return 1.0 / self._sqrt(x, **kw)
+
+    @property
+    def is_exact(self) -> bool:
+        return self.name == "exact"
+
+
+_REGISTRY = {
+    "exact": SqrtUnit("exact", exact.exact_sqrt, exact.exact_rsqrt, "IEEE sqrt (reference)"),
+    "e2afs": SqrtUnit(
+        "e2afs", e2afs.e2afs_sqrt, e2afs.e2afs_rsqrt, "paper's dual-level shift-add datapath"
+    ),
+    "esas": SqrtUnit("esas", esas.esas_sqrt, None, "reconstructed ESAS (level-1 series)"),
+    "cwaha4": SqrtUnit(
+        "cwaha4", partial(cwaha.cwaha_sqrt, k=4), None, "reconstructed CWAHA, 4 clusters"
+    ),
+    "cwaha8": SqrtUnit(
+        "cwaha8", partial(cwaha.cwaha_sqrt, k=8), None, "reconstructed CWAHA, 8 clusters"
+    ),
+}
+
+
+def get_unit(name: str) -> SqrtUnit:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown sqrt unit {name!r}; available: {sorted(_REGISTRY)}") from None
+
+
+def available_units():
+    return tuple(_REGISTRY)

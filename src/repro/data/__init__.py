@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, host_slice
+
+__all__ = ["DataConfig", "SyntheticLM", "host_slice"]

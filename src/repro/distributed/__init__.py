@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules, mesh helpers, SP decode."""
+from repro.distributed.constraints import axis_rules, constrain, logical_to_spec
+
+__all__ = ["axis_rules", "constrain", "logical_to_spec"]

@@ -1,0 +1,39 @@
+"""Jit'd wrapper: fused AdamW-E2AFS update for arbitrary-shaped params."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adam.adam import LANE, adam_kernel_call
+
+__all__ = ["adam_update"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "b1", "b2", "eps", "wd", "b1c", "b2c", "interpret"),
+)
+def adam_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                b1c=1.0, b2c=1.0, interpret=True):
+    shape = p.shape
+    n = p.size
+    width = LANE * 8
+    pad = (-n) % width
+
+    def prep(a, dtype):
+        f = a.reshape(-1).astype(dtype)
+        if pad:
+            f = jnp.concatenate([f, jnp.zeros((pad,), dtype)])
+        return f.reshape(-1, width)
+
+    rows = (n + pad) // width
+    block = 256 if rows % 256 == 0 else (8 if rows % 8 == 0 else 1)
+    po, mo, vo = adam_kernel_call(
+        prep(p, p.dtype), prep(g, g.dtype), prep(m, jnp.float32), prep(v, jnp.float32),
+        lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c,
+        block_rows=block, interpret=interpret,
+    )
+    unflat = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
+    return unflat(po, p.dtype), unflat(mo, jnp.float32), unflat(vo, jnp.float32)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused AdamW-E2AFS update kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import get_unit
+
+__all__ = ["ref_adam_update"]
+
+
+def ref_adam_update(p, g, m, v, *, lr, b1, b2, eps, wd, b1c, b2c, sqrt_unit="e2afs"):
+    unit = get_unit(sqrt_unit)
+    g32 = g.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * g32
+    v = b2 * v + (1 - b2) * g32 * g32
+    m_hat = m / b1c
+    v_hat = v / b2c
+    denom = unit.sqrt(v_hat) + eps
+    p32 = p.astype(jnp.float32)
+    new_p = p32 - lr * (m_hat / denom + wd * p32)
+    return new_p.astype(p.dtype), m, v

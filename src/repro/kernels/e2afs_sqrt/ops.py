@@ -1,0 +1,41 @@
+"""Jit'd public wrappers: arbitrary-shape elementwise E2AFS sqrt/rsqrt."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.e2afs_sqrt.e2afs_sqrt import LANE, e2afs_sqrt_kernel_call
+
+__all__ = ["sqrt", "rsqrt"]
+
+
+def _via_kernel(x: jax.Array, rsqrt_: bool, interpret: bool) -> jax.Array:
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    width = LANE * 8
+    pad = (-n) % width
+    if pad:
+        flat = jnp.concatenate([flat, jnp.ones((pad,), x.dtype)])
+    rows = flat.shape[0] // width
+    block = 256
+    rpad = (-rows) % block
+    if rpad:
+        flat = jnp.concatenate([flat, jnp.ones((rpad * width,), x.dtype)])
+        rows += rpad
+    out = e2afs_sqrt_kernel_call(
+        flat.reshape(rows, width), rsqrt=rsqrt_, block_rows=block, interpret=interpret
+    )
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sqrt(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    return _via_kernel(x, False, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rsqrt(x: jax.Array, *, interpret: bool = True) -> jax.Array:
+    return _via_kernel(x, True, interpret)

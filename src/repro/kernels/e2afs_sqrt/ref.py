@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the E2AFS sqrt/rsqrt kernel (the core datapath)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.e2afs import e2afs_rsqrt, e2afs_sqrt
+
+__all__ = ["ref_sqrt", "ref_rsqrt"]
+
+
+def ref_sqrt(x: jax.Array) -> jax.Array:
+    return e2afs_sqrt(x)
+
+
+def ref_rsqrt(x: jax.Array) -> jax.Array:
+    return e2afs_rsqrt(x)

@@ -1,0 +1,26 @@
+"""Jit'd wrapper: fused RMSNorm over (..., d) with E2AFS-R rsqrt."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel_call
+
+__all__ = ["rmsnorm"]
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, interpret: bool = True):
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    x2d = x.reshape(rows, d)
+    block = 8
+    pad = (-rows) % block
+    if pad:
+        import jax.numpy as jnp
+
+        x2d = jnp.concatenate([x2d, jnp.ones((pad, d), x.dtype)])
+    out = rmsnorm_kernel_call(x2d, scale, eps=eps, block_rows=block, interpret=interpret)
+    return out[:rows].reshape(shape)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import get_unit
+
+__all__ = ["ref_rmsnorm"]
+
+
+def ref_rmsnorm(x, scale, *, sqrt_unit: str = "e2afs", eps: float = 1e-6):
+    unit = get_unit(sqrt_unit)
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = unit.rsqrt(ms + eps)
+    return (xf * inv).astype(x.dtype) * (1.0 + scale.astype(x.dtype))

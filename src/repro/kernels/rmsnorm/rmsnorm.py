@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: RMSNorm fused with the E2AFS-R integer rsqrt.
+
+The fusion story on TPU (DESIGN.md §3): the energy win of the paper's unit
+translates to (a) no transcendental rsqrt op, (b) the norm reads x once from
+HBM and writes once — the mean-square reduce, the integer rsqrt datapath and
+the scale multiply all happen in VMEM/VREGs in one pass.
+
+Tiling: rows x d_model blocks, d_model (the reduce axis) kept whole per tile
+(d <= 8192 => tile <= 8192*block_rows*4B; block_rows=8 keeps it ~256KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import numerics
+from repro.core.e2afs import _rsqrt_mantissa_exponent
+
+__all__ = ["rmsnorm_kernel_call"]
+
+
+def _rsqrt_f32(ms):
+    fmt = numerics.FP32
+    sign, exp, man = numerics.decompose(ms, fmt)
+    exp_out, man_out = _rsqrt_mantissa_exponent(exp, man, fmt)
+    return numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+    inv = _rsqrt_f32(ms)  # E2AFS-R integer datapath, in-register
+    scale = 1.0 + s_ref[...].astype(x.dtype)
+    o_ref[...] = (xf * inv).astype(x.dtype) * scale
+
+
+def rmsnorm_kernel_call(
+    x2d: jax.Array,
+    scale: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    rows, d = x2d.shape
+    assert scale.shape == (d,)
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, scale)

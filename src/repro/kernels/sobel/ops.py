@@ -1,0 +1,25 @@
+"""Jit'd wrapper: Sobel magnitude for arbitrary image sizes (pads to tile)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sobel.sobel import sobel_kernel_call
+
+__all__ = ["sobel_magnitude"]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sobel_magnitude(img: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """img: (H, W) float32.  Returns (H-2, W-2) gradient magnitude."""
+    h, w = img.shape
+    oh, ow = h - 2, w - 2
+    bh = 64 if oh % 64 == 0 else (2 if oh % 2 == 0 else 1)
+    bw = 128 if ow % 128 == 0 else (2 if ow % 2 == 0 else 1)
+    ph = (-oh) % bh
+    pw = (-ow) % bw
+    padded = jnp.pad(img.astype(jnp.float32), ((0, ph), (0, pw)), mode="edge")
+    out = sobel_kernel_call(padded, bh=bh, bw=bw, interpret=interpret)
+    return out[:oh, :ow]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Sobel gradient-magnitude kernel (paper §4.1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import get_unit
+
+__all__ = ["ref_sobel"]
+
+KX = jnp.asarray([[-1.0, 0.0, 1.0], [-2.0, 0.0, 2.0], [-1.0, 0.0, 1.0]])
+KY = jnp.asarray([[-1.0, -2.0, -1.0], [0.0, 0.0, 0.0], [1.0, 2.0, 1.0]])
+
+
+def ref_sobel(img, *, sqrt_unit: str = "e2afs"):
+    """img: (H, W) float32 in [0, 255].  Returns gradient magnitude (H-2, W-2)."""
+    unit = get_unit(sqrt_unit)
+    h, w = img.shape
+    gx = jnp.zeros((h - 2, w - 2), jnp.float32)
+    gy = jnp.zeros((h - 2, w - 2), jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            patch = img[di : di + h - 2, dj : dj + w - 2]
+            gx = gx + KX[di, dj] * patch
+            gy = gy + KY[di, dj] * patch
+    mag2 = gx * gx + gy * gy
+    return unit.sqrt(jnp.maximum(mag2, 1e-12))

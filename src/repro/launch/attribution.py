@@ -1,0 +1,105 @@
+"""Per-instruction cost attribution for hillclimbing (the 'profile' of the
+dry-run world): walks a compiled module like hlo_cost.analyze_hlo but keeps
+per-instruction records with loop multipliers, so the dominant roofline term
+can be broken down into named HLO ops.
+
+Used by: python -m repro.launch.dryrun ... --attribute  (adds 'top_bytes' /
+'top_flops' to the cell JSON)."""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+from repro.launch import hlo_cost as hc
+
+__all__ = ["attribute"]
+
+
+def attribute(hlo_text: str, top: int = 20):
+    comps = hc._parse_module(hlo_text)
+    byte_recs: List[Tuple[float, str]] = []
+    flop_recs: List[Tuple[float, str]] = []
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = hc._COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(2)
+                break
+
+    def walk(name, mult):
+        c = comps.get(name)
+        if c is None:
+            return
+        inst_by_name = {i.name: i for i in c.insts}
+
+        def resolve(o, d=0):
+            s = inst_by_name.get(o)
+            if s is None or d > 8:
+                return c.types.get(o, "")
+            if hc._is_passthrough(s, comps) and s.operands:
+                best = max(s.operands, key=lambda x: hc._type_bytes(c.types.get(x, "")))
+                return resolve(best, d + 1)
+            return c.types.get(o, "")
+
+        for inst in c.insts:
+            op = inst.op
+            if op == "while":
+                called = dict(re.findall(r"(condition|body)=%?([\w\.\-]+)", inst.rest))
+                trips = (
+                    hc._trip_count(comps[called["condition"]])
+                    if called.get("condition") in comps
+                    else 1
+                )
+                walk(called.get("body"), mult * trips)
+                walk(called.get("condition"), mult * trips)
+                continue
+            if op in ("call", "conditional"):
+                for sub in hc._CALLED_RE.findall(inst.rest):
+                    walk(sub, mult)
+                continue
+            if op in hc._SKIP_OPS or hc._is_passthrough(inst, comps):
+                continue
+            tag = f"{inst.name} x{mult} {inst.result_type[:40]}"
+            if op in ("dynamic-slice", "gather"):
+                byte_recs.append((2 * hc._type_bytes(inst.result_type) * mult, tag))
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                upd = inst.operands[1] if len(inst.operands) > 1 else None
+                b = 2 * hc._type_bytes(c.types.get(upd, "")) if upd else 0
+                byte_recs.append((b * mult, tag))
+                continue
+            if op == "fusion":
+                kind = hc._fusion_kind(inst, comps)
+                dus_b = 0
+                fl = 0.0
+                for sub in hc._CALLED_RE.findall(inst.rest):
+                    sc = comps.get(sub)
+                    if sc:
+                        for si in sc.insts:
+                            if si.op in ("dot", "convolution"):
+                                fl += hc._dot_flops(si, sc.types)
+                            if si.op == "dynamic-update-slice" and len(si.operands) > 1:
+                                dus_b += hc._type_bytes(sc.types.get(si.operands[1], ""))
+                if fl:
+                    flop_recs.append((fl * mult, tag))
+                if kind == "dus":
+                    byte_recs.append((2 * dus_b * mult, tag))
+                    continue
+                if kind == "slice":
+                    byte_recs.append((2 * hc._type_bytes(inst.result_type) * mult, tag))
+                    continue
+            rb = hc._type_bytes(inst.result_type)
+            ob = sum(hc._type_bytes(resolve(o)) for o in inst.operands)
+            byte_recs.append(((rb + ob) * mult, tag))
+            if op in ("dot", "convolution"):
+                flop_recs.append((hc._dot_flops(inst, c.types) * mult, tag))
+
+    walk(entry, 1)
+    byte_recs.sort(key=lambda r: -r[0])
+    flop_recs.sort(key=lambda r: -r[0])
+    return (
+        [{"gib": round(b / 2**30, 3), "inst": t} for b, t in byte_recs[:top]],
+        [{"gflop": round(f / 1e9, 1), "inst": t} for f, t in flop_recs[:top]],
+    )

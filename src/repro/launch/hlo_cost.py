@@ -1,0 +1,348 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body once, which
+undercounts scanned layer stacks (and chunked-attention / SSD chunk scans) by
+the trip count.  This module walks the compiled HLO text, extracts each while
+loop's trip count from its condition computation, and accumulates
+
+    flops            2 * prod(result_dims) * prod(contracting_dims) per dot
+    bytes            operand + result bytes per instruction (fusion internals
+                     excluded — the standard HBM-traffic estimate)
+    collective bytes result bytes per all-reduce / all-gather / reduce-scatter
+                     / all-to-all / collective-permute
+
+multiplying every term inside a while body by the loop's trip count
+(nested loops compose).  Validated against cost_analysis() on loop-free
+modules (tests/launch/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "after-all",
+    "iota",
+}
+
+# Single-input reshuffle/recast ops.  On the TPU target these fuse into their
+# producer/consumer (and the bf16->f32 converts the CPU backend inserts for
+# oneDNN matmuls don't exist at all), so they are counted as FREE and operand
+# byte counting at consumers resolves *through* them to the source tensor's
+# true dtype/shape (see _resolve in _analyze_comp).
+_PASSTHROUGH_OPS = {"convert", "copy", "transpose", "bitcast-convert", "reshape"}
+_PASSTHROUGH_FUSION_RE = re.compile(
+    r"^(wrapped_)?(convert|copy|transpose)[\w]*(_fusion)?", re.IGNORECASE
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_INST_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|\w+\[[\d,]*\]\S*))\s+([\w\-]+)\((.*)$"
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class _Inst:
+    name: str
+    result_type: str
+    op: str
+    rest: str  # operand list + attributes (raw text after '(')
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class _Computation:
+    name: str
+    insts: List[_Inst] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)
+    is_fusion: bool = False
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, dict] = field(default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(k, {"count": 0, "bytes": 0})
+            slot["count"] += v["count"] * mult
+            slot["bytes"] += v["bytes"] * mult
+
+
+_OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Operand names from the call-paren contents (up to the matching ')')."""
+    depth = 1
+    out = []
+    cur = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append(cur)
+                break
+        elif ch == "," and depth == 1:
+            out.append(cur)
+            cur = ""
+            continue
+        cur += ch
+    names = []
+    for frag in out:
+        m = _OPERAND_RE.search(frag.strip())
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _parse_module(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and ("{" in line) and ("->" in line):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                name = m.group(2)
+                cur = _Computation(name=name, is_fusion="fused" in name)
+                comps[name] = cur
+                # parameters declared in the header get types from body lines
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        _, name, rtype, op, rest = m.groups()
+        inst = _Inst(name=name, result_type=rtype, op=op, rest=rest)
+        inst.operands = _parse_operands(rest)
+        cur.insts.append(inst)
+        cur.types[name] = rtype
+    return comps
+
+
+_TRIP_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Largest integer constant in the condition computation (scan-style
+    conditions compare the induction variable against the length)."""
+    best = 1
+    for inst in cond.insts:
+        if inst.op != "constant":
+            continue
+        m = _TRIP_CONST_RE.search("constant(" + inst.rest)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(inst: _Inst, types: Dict[str, str]) -> float:
+    res_dims = _shape_dims(inst.result_type)
+    out = 1
+    for d in res_dims:
+        out *= d
+    k = 1
+    m = _CONTRACT_RE.search(inst.rest)
+    if m and inst.operands:
+        lhs_type = types.get(inst.operands[0], "")
+        lhs_dims = _shape_dims(lhs_type)
+        idxs = [int(i) for i in m.group(1).split(",") if i != ""]
+        for i in idxs:
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out * k
+
+
+_FUSION_TRANSPARENT = _PASSTHROUGH_OPS | _SKIP_OPS | {"broadcast"}
+
+
+def _fusion_kind(inst: _Inst, comps: Dict[str, _Computation]) -> str:
+    """Classify a fusion: 'dus' (in-place update), 'slice' (gather/read),
+    'passthrough' (pure recast/reshuffle), or 'compute'."""
+    has_dus = has_slice = False
+    all_transparent = True
+    for sub in _CALLED_RE.findall(inst.rest):
+        sc = comps.get(sub)
+        if not sc:
+            continue
+        for si in sc.insts:
+            if si.op == "dynamic-update-slice":
+                has_dus = True
+            elif si.op in ("dynamic-slice", "gather"):
+                has_slice = True
+            elif si.op not in _FUSION_TRANSPARENT:
+                all_transparent = False
+    if has_dus:
+        return "dus"
+    if has_slice:
+        return "slice"
+    if all_transparent:
+        return "passthrough"
+    return "compute"
+
+
+def _is_passthrough(inst: _Inst, comps: Dict[str, _Computation]) -> bool:
+    """True for single-source recast/reshuffle instructions (incl. fusions
+    whose body is purely convert/copy/transpose/reshape)."""
+    if inst.op in _PASSTHROUGH_OPS:
+        return True
+    if inst.op == "fusion":
+        return _fusion_kind(inst, comps) == "passthrough"
+    return False
+
+
+def _analyze_comp(name: str, comps: Dict[str, _Computation], memo: Dict[str, HloCost]) -> HloCost:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    cost = HloCost()
+    if comp is None:
+        memo[name] = cost
+        return cost
+    memo[name] = cost  # pre-insert to guard recursion
+
+    # map pass-through results to their source tensor's type
+    inst_by_name = {i.name: i for i in comp.insts}
+
+    def _resolve_type(opname: str, depth=0) -> str:
+        src = inst_by_name.get(opname)
+        if src is None or depth > 8:
+            return comp.types.get(opname, "")
+        if _is_passthrough(src, comps) and src.operands:
+            # real data operand is the largest-typed one (index operands tiny)
+            best = max(src.operands, key=lambda o: _type_bytes(comp.types.get(o, "")))
+            return _resolve_type(best, depth + 1)
+        return comp.types.get(opname, "")
+
+    for inst in comp.insts:
+        op = inst.op
+        if op == "while":
+            called = dict(
+                (m[0], m[1]) for m in re.findall(r"(condition|body)=%?([\w\.\-]+)", inst.rest)
+            )
+            body = called.get("body")
+            cond = called.get("condition")
+            trips = _trip_count(comps[cond]) if cond and cond in comps else 1
+            if body:
+                cost.add(_analyze_comp(body, comps, memo), mult=trips)
+            if cond:
+                cost.add(_analyze_comp(cond, comps, memo), mult=trips)
+            continue
+        if op in ("call", "conditional"):
+            for sub in _CALLED_RE.findall(inst.rest):
+                cost.add(_analyze_comp(sub, comps, memo))
+            continue
+        if op in _SKIP_OPS:
+            continue
+        if _is_passthrough(inst, comps):
+            continue
+        if op in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered rows: result bytes x2 (read+write)
+            cost.bytes += 2 * _type_bytes(inst.result_type)
+            continue
+        if op in ("dynamic-update-slice", "scatter"):
+            # in-place update: traffic is the update operand, not the buffer
+            upd = inst.operands[1] if len(inst.operands) > 1 else None
+            ub = _type_bytes(comp.types.get(upd, "")) if upd else 0
+            cost.bytes += 2 * ub
+            continue
+        if op == "fusion":
+            # fusion internals are on-chip; count boundary traffic + any dots
+            # inside the fused computation (CPU keeps dots unfused, TPU may not)
+            kind = _fusion_kind(inst, comps)
+            dus_bytes = 0
+            for sub in _CALLED_RE.findall(inst.rest):
+                subc = comps.get(sub)
+                if subc:
+                    for si in subc.insts:
+                        if si.op in ("dot", "convolution"):
+                            cost.flops += _dot_flops(si, subc.types)
+                        if si.op == "dynamic-update-slice" and len(si.operands) > 1:
+                            dus_bytes += _type_bytes(subc.types.get(si.operands[1], ""))
+            if kind == "dus":
+                # in-place cache-update fusion: traffic is the update slice,
+                # not the full carried buffer in the operand/result types
+                cost.bytes += 2 * dus_bytes
+                continue
+            if kind == "slice":
+                # gather/slice-read fusion: traffic is the sliced result
+                cost.bytes += 2 * _type_bytes(inst.result_type)
+                continue
+        rbytes = _type_bytes(inst.result_type)
+        obytes = sum(_type_bytes(_resolve_type(o)) for o in inst.operands)
+        cost.bytes += rbytes + obytes
+        if op in ("dot", "convolution"):
+            cost.flops += _dot_flops(inst, comp.types)
+        for coll in _COLLECTIVES:
+            if op == coll or op == coll + "-start":
+                slot = cost.collectives.setdefault(coll, {"count": 0, "bytes": 0})
+                slot["count"] += 1
+                slot["bytes"] += rbytes
+                cost.collective_bytes += rbytes
+                break
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                entry = m.group(2)
+                break
+    if entry is None:
+        # fall back: last computation
+        entry = list(comps)[-1] if comps else ""
+    return _analyze_comp(entry, comps, {})

@@ -1,0 +1,34 @@
+"""Production mesh builders (functions, not module constants — importing this
+module never touches jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods x 256
+    = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the dry-run "
+            "entry point must set XLA_FLAGS=--xla_force_host_platform_device_count "
+            "before importing jax"
+        )
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_mesh_for(shape, axes):
+    import numpy as np
+
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,137 @@
+"""Train / prefill / serve step functions (the units the launcher jits).
+
+These are pure functions of (params, opt_state, batch) etc. so the same code
+path serves the real trainer, the smoke tests, and the 512-device dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_update, compress_decompress
+
+__all__ = ["loss_fn", "make_train_step", "make_prefill_step", "make_serve_step"]
+
+MOE_AUX_COEF = 0.01
+
+
+LOSS_CHUNK = 1024
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Masked next-token cross-entropy (+ MoE aux).
+
+    The CE is computed over *sequence chunks* so the fp32 (b, s, vocab)
+    logits tensor is never materialized whole — at 150k-vocab/4k-seq scale
+    that buffer alone is tens of GiB per chip (§Perf It2)."""
+    (x, unembed), aux = lm.forward(params, cfg, batch, return_hidden=True)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+
+    b, s, d = x.shape
+    chunk = LOSS_CHUNK if s % LOSS_CHUNK == 0 else s
+    nc = s // chunk
+
+    def chunk_nll(carry, idx):
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, 1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, 1)
+        logits = jnp.einsum("bsd,dv->bsv", xc, unembed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return carry + ((lse - lab) * mc).sum(), None
+
+    if nc > 1:
+        nll_sum, _ = jax.lax.scan(chunk_nll, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    else:
+        nll_sum, _ = chunk_nll(jnp.zeros((), jnp.float32), 0)
+    loss = nll_sum / jnp.maximum(mask.sum(), 1.0)
+    total = loss + MOE_AUX_COEF * aux["moe_aux"]
+    return total, {"loss": loss, "moe_aux": aux["moe_aux"]}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    compress_grads: bool = False,
+    microbatches: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches`` > 1 runs gradient accumulation: the global batch is
+    split along its leading axis and scanned, bounding activation memory to
+    one microbatch (the carried gradient tree shards like the params).
+    With ``compress_grads`` the int8 error-feedback compressor wraps the
+    gradient tree (opt_state grows a 'residual' entry)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            functools.partial(loss_fn, cfg=cfg, batch=batch), has_aux=True
+        )(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (t, metrics), grads = grads_of(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+                batch,
+            )
+
+            def accum(carry, micro):
+                g_acc, t_acc = carry
+                (t, _), g = grads_of(params, micro)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, t_acc + t), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, t_sum), _ = jax.lax.scan(accum, (zeros, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            t = t_sum / microbatches
+            metrics = {"loss": t}
+        if compress_grads:
+            grads, new_resid = compress_decompress(grads, opt_state["residual"])
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, {k: v for k, v in opt_state.items() if k != "residual"}, params
+        )
+        if compress_grads:
+            new_opt["residual"] = new_resid
+        metrics = dict(metrics, total=t, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Prefill = forward producing last-position logits (cache fill elided in
+    the dry-run: the compute/memory profile is the forward pass)."""
+
+    def prefill_step(params, batch):
+        logits, _ = lm.forward(params, cfg, batch)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, with_cross: bool = False):
+    """serve_step(params, cache, tokens, pos[, cross_kv]) -> (logits, cache)."""
+
+    if with_cross:
+
+        def serve_step(params, cache, tokens, pos, cross_kv):
+            return lm.decode_step(params, cfg, cache, tokens, pos, cross_kv=cross_kv)
+
+    else:
+
+        def serve_step(params, cache, tokens, pos):
+            return lm.decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,1 @@
+"""Model substrate layers (attention, norms, MLP/MoE, SSD, RG-LRU)."""

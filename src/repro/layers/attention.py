@@ -1,0 +1,346 @@
+"""Grouped-query attention with causal / sliding-window / bidirectional /
+cross modes, optional QK-norm (through the configured sqrt unit), RoPE, and a
+decode path over a (optionally int8-quantized, optionally sequence-sharded)
+KV cache.
+
+Shapes follow the (batch, seq, heads, head_dim) convention; logical axes:
+  activations: ("batch", "seq", "heads", None)
+  weights:     q (embed, heads, head_dim) / kv (embed, kv_heads, head_dim)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.layers.norms import rmsnorm
+from repro.layers.param import DenseInit, zeros
+from repro.layers.rope import apply_rope
+
+__all__ = [
+    "attention_init",
+    "attention_train",
+    "attention_decode",
+    "init_kv_cache",
+    "kv_cache_specs",
+]
+
+NEG_INF = -2.0e38
+
+
+def attention_init(ini: DenseInit, cfg, *, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ini.add("wq", (d, h, hd), ("embed", "heads", None), scale=1.0)
+    ini.add("wk", (d, kv, hd), ("embed", "kv_heads", None), scale=1.0)
+    ini.add("wv", (d, kv, hd), ("embed", "kv_heads", None), scale=1.0)
+    ini.add("wo", (h, hd, d), ("heads", None, "embed"), scale=1.0)
+    if cfg.qk_norm:
+        ini.add("q_norm", (hd,), (None,), init=zeros)
+        ini.add("k_norm", (hd,), (None,), init=zeros)
+    del cross
+
+
+def _project_qkv(p, cfg, xq, xkv, q_positions, kv_positions, *, use_rope):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit)
+        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit)
+    if use_rope:
+        q = apply_rope(q, q_positions, theta=cfg.rope_theta)
+        k = apply_rope(k, kv_positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(mode, q_pos, kv_pos, window):
+    """(q, kv) additive mask from position vectors."""
+    d = q_pos[:, None] - kv_pos[None, :]
+    if mode == "causal":
+        ok = d >= 0
+    elif mode == "window":  # causal sliding window
+        ok = (d >= 0) & (d < window)
+    elif mode == "bidir" or mode == "cross":
+        ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    else:
+        raise ValueError(mode)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _softmax_scores(sc, out_dtype):
+    """Softmax over the last axis.  For bf16-materialized scores (inference
+    prefill) the O(s^2) chain tensors stay bf16 with an fp32 *accumulation*
+    only — max-subtraction bounds the exponent so bf16 exp is safe, and the
+    normalizer sum is f32 (pairwise bf16 summation at 32k terms is not).
+    fp32 scores use the stock fp32 softmax."""
+    if sc.dtype == jnp.float32:
+        return jax.nn.softmax(sc, axis=-1).astype(out_dtype)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    e = jnp.exp(sc - m)
+    s = jnp.sum(e.astype(jnp.float32), axis=-1, keepdims=True)
+    return (e / s.astype(e.dtype)).astype(out_dtype)
+
+
+def _expand_kv(k, h):
+    """Broadcast kv heads up to h query heads.  Deliberately NOT a reshape of
+    q into (kv, group): that splits the sharded head dim into factors the
+    mesh can't divide (e.g. 48 -> (4,12) on a 16-wide axis) and GSPMD then
+    REPLICATES the O(s^2) score tensors — measured 16x memory blowup on
+    starcoder2 prefill (§Perf prefill study).  The repeat keeps 'h' intact
+    (and fuses into the einsum on TPU)."""
+    g = h // k.shape[2]
+    return k if g == 1 else jnp.repeat(k, g, axis=2)
+
+
+def _gqa_scores(q, k):
+    """q: (b,s,h,k)  k: (b,t,kv,k) -> scores (b, h, s, t)."""
+    return jnp.einsum("bshk,bthk->bhst", q, _expand_kv(k, q.shape[2]))
+
+
+def _gqa_out(weights, v):
+    """weights: (b, h, s, t), v: (b,t,kv,k) -> (b,s,h,k)."""
+    return jnp.einsum("bhst,bthk->bshk", weights, _expand_kv(v, weights.shape[1]))
+
+
+def attention_train(
+    p,
+    cfg,
+    x,
+    *,
+    mode: str = "causal",
+    window: Optional[int] = None,
+    kv_x: Optional[jax.Array] = None,
+    positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+):
+    """Full-sequence attention (training / prefill).
+
+    mode: "causal" | "window" | "bidir" | "cross".  For "cross", ``kv_x`` is
+    the encoder output.
+
+    For seq > q_chunk, queries are processed in chunks via lax.scan (the
+    memory-efficient / flash-style schedule — on real TPU this layer is where
+    a Pallas flash kernel slots in; the XLA formulation keeps the dry-run's
+    peak memory honest).  "window" mode restricts each query chunk to a fixed
+    kv band of width (window + q_chunk), keeping windowed attention
+    sub-quadratic in both memory AND flops.
+    """
+    b, s, d = x.shape
+    xkv = x if kv_x is None else kv_x
+    t = xkv.shape[1]
+    q_pos = positions if positions is not None else jnp.arange(s)
+    kv_pos = kv_positions if kv_positions is not None else jnp.arange(t)
+    use_rope = cfg.pos == "rope" and mode != "cross"
+    q, k, v = _project_qkv(p, cfg, x, xkv, q_pos, kv_pos, use_rope=use_rope)
+    scale = cfg.d_head**-0.5  # compile-time constant; kept exact (DESIGN.md §4)
+
+    sdt = jnp.dtype(getattr(cfg, "scores_dtype", "float32"))
+    if s <= q_chunk or s % q_chunk != 0:
+        scores = _gqa_scores(q, k).astype(sdt) * scale
+        scores = scores + _mask(mode, q_pos, kv_pos, window)[None, None].astype(sdt)
+        scores = checkpoint_name(scores, "attn_scores")
+        w = _softmax_scores(scores, x.dtype)
+        out = _gqa_out(w, v)
+    else:
+        out = _chunked_attention(q, k, v, mode, window, q_pos, kv_pos, scale, q_chunk, sdt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def _chunked_attention(q, k, v, mode, window, q_pos, kv_pos, scale, q_chunk, sdt=None):
+    """Scan over query chunks; per chunk the full (or banded) KV is visible."""
+    sdt = sdt or jnp.float32
+    b, s, h, hd = q.shape
+    n_chunks = s // q_chunk
+    qc = q.reshape(b, n_chunks, q_chunk, h, hd)
+    pc = q_pos.reshape(n_chunks, q_chunk)
+
+    banded = mode == "window" and window is not None
+    if banded:
+        # kv band: [chunk_start - band + q_chunk, chunk_start + q_chunk)
+        band = window + q_chunk
+        pad = band - q_chunk
+        k_pad = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        kv_pos_pad = jnp.pad(kv_pos, (pad, 0), constant_values=-(10**9))
+
+    def chunk_body(_, idx):
+        qi = qc[:, idx]
+        pi = pc[idx]
+        if banded:
+            start = idx * q_chunk  # in padded coords the band ends at start+band
+            ki = jax.lax.dynamic_slice_in_dim(k_pad, start, band, 1)
+            vi = jax.lax.dynamic_slice_in_dim(v_pad, start, band, 1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos_pad, start, band, 0)
+        else:
+            ki, vi, kp = k, v, kv_pos
+        sc = _gqa_scores(qi, ki).astype(sdt) * scale
+        sc = sc + _mask(mode, pi, kp, window)[None, None].astype(sdt)
+        sc = checkpoint_name(sc, "attn_scores")
+        w = _softmax_scores(sc, q.dtype)
+        return None, _gqa_out(w, vi)
+
+    _, out = jax.lax.scan(chunk_body, None, jnp.arange(n_chunks))
+    # out: (n_chunks, b, q_chunk, h, hd) -> (b, s, h, hd)
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode path with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg, batch, cache_len, dtype, *, quantized: bool = False):
+    """One layer's cache. quantized=True stores int8 KV + per (b,t,h) scales
+    (beyond-paper optimization in the approximate-computing spirit; halves
+    the decode memory roofline term — see EXPERIMENTS.md §Perf)."""
+    kv, hd = cfg.n_kv_heads, cfg.d_head
+    shape = (batch, cache_len, kv, hd)
+    if quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(quantized: bool = False):
+    base = {
+        "k": ("batch", "kv_seq", "kv_heads", "kv_dim"),
+        "v": ("batch", "kv_seq", "kv_heads", "kv_dim"),
+    }
+    if quantized:
+        base["k_scale"] = ("batch", "kv_seq", "kv_heads")
+        base["v_scale"] = ("batch", "kv_seq", "kv_heads")
+    return base
+
+
+def _quantize_kv(x):
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0 + 1e-8
+    q = jnp.round(x / scale[..., None]).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q, scale, dtype):
+    return q.astype(dtype) * scale[..., None].astype(dtype)
+
+
+def _cache_update(buf, new, slot, layer_idx):
+    """Write one token line in place.  ``buf`` is (b, t, h, d) per-layer, or
+    (L, b, t, h, d) stacked when ``layer_idx`` is given — the scan-friendly
+    form: the carried cache is updated with a single small DUS, never
+    re-materialized."""
+    if layer_idx is None:
+        return jax.lax.dynamic_update_index_in_dim(buf, new, slot, 1)
+    upd = new[None, :, None] if new.ndim + 2 == buf.ndim else new[None]
+    start = (layer_idx, 0, slot) + (0,) * (buf.ndim - 3)
+    return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype), start)
+
+
+def _cache_read(buf, layer_idx):
+    return buf if layer_idx is None else jax.lax.dynamic_index_in_dim(
+        buf, layer_idx, 0, keepdims=False
+    )
+
+
+def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
+                     layer_idx=None):
+    """Single-token decode. x: (b, 1, d); cache holds ``cache_len`` slots.
+
+    For sliding-window layers the cache is a ring buffer of size ``window``.
+    With ``layer_idx``, cache tensors carry a leading stacked-layers axis and
+    are updated in place (see _cache_update).  Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    assert s == 1
+    t_axis = 1 if layer_idx is None else 2
+    cache_len = cache["k"].shape[t_axis]
+    quantized = cache["k"].dtype == jnp.int8
+
+    kv_pos_q = jnp.asarray([0], jnp.int32) + pos  # rope position of new token
+    use_rope = cfg.pos == "rope"
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x, x, kv_pos_q, kv_pos_q, use_rope=use_rope
+    )
+
+    # ring-buffer slot; for full caches cache_len covers all positions so
+    # this is just ``pos``
+    slot = jnp.asarray(pos % cache_len, jnp.int32)
+    k_scale = v_scale = None
+    if quantized:
+        kq, ks = _quantize_kv(k_new[:, 0])
+        vq, vs = _quantize_kv(v_new[:, 0])
+        cache = {
+            "k": _cache_update(cache["k"], kq, slot, layer_idx),
+            "v": _cache_update(cache["v"], vq, slot, layer_idx),
+            "k_scale": _cache_update(cache["k_scale"], ks, slot, layer_idx),
+            "v_scale": _cache_update(cache["v_scale"], vs, slot, layer_idx),
+        }
+        # scales are FOLDED into the scores / attention weights rather than
+        # materializing a dequantized cache copy (saves 2 full-cache HBM
+        # passes per layer; on TPU the int8->bf16 convert fuses into the
+        # matmul — §Perf decode study It2)
+        k = _cache_read(cache["k"], layer_idx).astype(x.dtype)
+        v = _cache_read(cache["v"], layer_idx).astype(x.dtype)
+        k_scale = _cache_read(cache["k_scale"], layer_idx)  # (b, t, kv)
+        v_scale = _cache_read(cache["v_scale"], layer_idx)
+    else:
+        cache = {
+            "k": _cache_update(cache["k"], k_new[:, 0], slot, layer_idx),
+            "v": _cache_update(cache["v"], v_new[:, 0], slot, layer_idx),
+        }
+        k = _cache_read(cache["k"], layer_idx)
+        v = _cache_read(cache["v"], layer_idx)
+
+    scale = cfg.d_head**-0.5
+    scores = _gqa_scores(q, k).astype(jnp.float32) * scale  # (b,h,1,T)
+    g = q.shape[2] // cache["k"].shape[2 if layer_idx is None else 3]
+    if k_scale is not None:
+        # fold per-(b,t,kv) k scales into scores: (b,t,kv) -> (b,h,1,t)
+        ks = jnp.repeat(jnp.moveaxis(k_scale, 1, 2), g, axis=1)
+        scores = scores * ks[:, :, None, :]
+    # mask out unwritten / out-of-window slots
+    t_idx = jnp.arange(cache_len)
+    if window:
+        valid = (t_idx <= pos) if cache_len > window else jnp.ones_like(t_idx, bool)
+        # ring buffer: all slots valid once pos >= cache_len
+        valid = valid | (pos >= cache_len)
+    else:
+        valid = t_idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    if v_scale is not None:
+        # fold v scales into the (tiny) attention weights pre-contraction
+        vs = jnp.repeat(jnp.moveaxis(v_scale, 1, 2), g, axis=1)
+        w = w * vs[:, :, None, :].astype(w.dtype)
+    out = _gqa_out(w, v)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention decode (enc-dec): encoder K/V are computed once.
+# ---------------------------------------------------------------------------
+
+
+def precompute_cross_kv(p, cfg, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(enc_out.dtype))
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit)
+    return {"ck": k, "cv": v}
+
+
+def cross_attention_decode(p, cfg, x, cross_kv):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit)
+    scale = cfg.d_head**-0.5
+    scores = _gqa_scores(q, cross_kv["ck"]).astype(jnp.float32) * scale
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(w, cross_kv["cv"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

@@ -1,0 +1,33 @@
+"""Dense MLP blocks: SwiGLU (llama-family default) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.param import DenseInit, zeros
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def mlp_init(ini: DenseInit, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        ini.add("wi_gate", (d, f), ("embed", "mlp"))
+        ini.add("wi_up", (d, f), ("embed", "mlp"))
+    else:
+        ini.add("wi_up", (d, f), ("embed", "mlp"))
+        ini.add("bi", (f,), ("mlp",), init=zeros)
+        ini.add("bo", (d,), ("embed",), init=zeros)
+    ini.add("wo", (f, d), ("mlp", "embed"))
+
+
+def mlp_apply(p, cfg, x):
+    dt = x.dtype
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    h = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(dt)) + p["bi"].astype(dt)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt)) + p["bo"].astype(dt)

@@ -1,0 +1,45 @@
+"""Normalization layers with a pluggable sqrt unit — the paper's technique
+integrated at its highest-traffic site (every layer of every architecture).
+
+``x * rsqrt(ms + eps)`` is computed through the configured SqrtUnit: "e2afs"
+routes through the E2AFS-R integer datapath (multiplier-free rsqrt), "exact"
+through ``jax.lax.rsqrt``.  The reduction is fp32 regardless of activation
+dtype; the rsqrt itself runs in the reduction dtype's bit format.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import get_unit
+from repro.layers.param import DenseInit, ones, zeros
+
+__all__ = ["rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm"]
+
+
+def rmsnorm_init(ini: DenseInit, name: str, d: int):
+    # zero-init with (1 + scale) application (gemma convention)
+    ini.add(name, (d,), ("embed",), init=zeros)
+
+
+def rmsnorm(scale, x, *, sqrt_unit: str = "exact", eps: float = 1e-6):
+    unit = get_unit(sqrt_unit)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = unit.rsqrt(ms + eps)
+    return (xf * inv).astype(dt) * (1.0 + scale.astype(dt))
+
+
+def layernorm_init(ini: DenseInit, name: str, d: int):
+    ini.add(f"{name}_scale", (d,), ("embed",), init=ones)
+    ini.add(f"{name}_bias", (d,), ("embed",), init=zeros)
+
+
+def layernorm(scale, bias, x, *, sqrt_unit: str = "exact", eps: float = 1e-5):
+    unit = get_unit(sqrt_unit)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = unit.rsqrt(var + eps)
+    return ((xf - mu) * inv).astype(dt) * scale.astype(dt) + bias.astype(dt)

@@ -1,0 +1,95 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure: x -> {gate branch: linear+gelu} * {recurrent branch:
+linear -> causal conv1d(4) -> RG-LRU} -> linear out.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(c * softplus(Lambda) * r_t * log a_base)   [kept exact]
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The ``sqrt(1 - a_t^2)`` input-normalizer is a *technique site*: it routes
+through the configured SqrtUnit (E2AFS datapath when enabled).  Training and
+prefill use ``jax.lax.associative_scan`` over the affine recurrence; decode
+is the O(1) step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_unit
+from repro.layers.param import DenseInit, zeros
+from repro.layers.ssd import CONV_W, _causal_conv
+
+__all__ = ["rglru_init", "rglru_train", "rglru_decode", "init_rglru_state", "rglru_state_specs"]
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def rglru_init(ini: DenseInit, cfg):
+    d, dr = cfg.d_model, cfg.rglru.d_rnn
+    ini.add("gate_proj", (d, dr), ("embed", "mlp"))
+    ini.add("x_proj", (d, dr), ("embed", "mlp"))
+    ini.add("conv_w", (CONV_W, dr), (None, "mlp"), init=zeros, scale=0.25)
+    ini.add("w_r", (dr, dr), ("mlp", None), scale=0.5)
+    ini.add("w_i", (dr, dr), ("mlp", None), scale=0.5)
+    ini.add("lam", (dr,), ("mlp",), init=zeros)
+    ini.add("out_proj", (dr, d), ("mlp", "embed"))
+
+
+def _gates(p, cfg, xr):
+    """Returns (a_t, gated_input) for the recurrence, fp32."""
+    r = jax.nn.sigmoid(jnp.einsum("...k,kj->...j", xr, p["w_r"].astype(xr.dtype)).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...k,kj->...j", xr, p["w_i"].astype(xr.dtype)).astype(jnp.float32))
+    log_a_base = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32))  # (dr,) < 0
+    log_a = r * log_a_base  # (..., dr)
+    a = jnp.exp(log_a)
+    unit = get_unit(cfg.sqrt_unit)
+    norm = unit.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, norm * i * xr.astype(jnp.float32)
+
+
+def rglru_train(p, cfg, x):
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", x, p["gate_proj"].astype(dt)))
+    xr = jnp.einsum("bsd,dk->bsk", x, p["x_proj"].astype(dt))
+    xr = _causal_conv(xr, p["conv_w"].astype(dt))
+    a, b_in = _gates(p, cfg, xr)
+
+    # affine recurrence h_t = a_t h_{t-1} + b_t via associative scan
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    y = h.astype(dt) * gate
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt))
+
+
+def init_rglru_state(cfg, batch, dtype):
+    dr = cfg.rglru.d_rnn
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def rglru_state_specs():
+    return {"conv": ("batch", None, "mlp"), "h": ("batch", "mlp")}
+
+
+def rglru_decode(p, cfg, x, state):
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", x, p["gate_proj"].astype(dt)))
+    xr = jnp.einsum("bsd,dk->bsk", x, p["x_proj"].astype(dt))
+    conv_in = jnp.concatenate([state["conv"], xr], axis=1)
+    xr = jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"].astype(dt))[:, None]
+    new_conv = conv_in[:, 1:]
+
+    a, b_in = _gates(p, cfg, xr[:, 0])
+    h = a * state["h"] + b_in
+    y = h[:, None].astype(dt) * gate
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt))
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (RoPE), applied in fp32."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["apply_rope"]
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)

@@ -1,0 +1,183 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked matmul formulation.
+
+The chunked algorithm from the SSD paper (arXiv:2405.21060): intra-chunk
+terms are dense matmuls (MXU-friendly — the whole point of SSD on TPU) and
+inter-chunk state is carried by a short ``lax.scan`` over chunks.  The
+depthwise causal conv1d (width 4) is realized as shifted adds.
+
+Decode keeps (conv_state, ssm_state) per layer and does the O(1) recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.param import DenseInit, ones, zeros
+
+__all__ = ["ssd_init", "ssd_train", "ssd_decode", "init_ssd_state", "ssd_state_specs"]
+
+CONV_W = 4
+
+
+def ssd_init(ini: DenseInit, cfg):
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in, n, hp = s.d_inner, s.d_state, s.head_dim
+    nh = d_in // hp
+    ini.add("in_proj", (d, 2 * d_in + 2 * n + nh), ("embed", "heads_mix"))
+    ini.add("conv_w", (CONV_W, d_in + 2 * n), (None, "heads_mix"), init=ones, scale=0.25)
+    ini.add("a_log", (nh,), ("heads",), init=zeros)
+    ini.add("d_skip", (nh,), ("heads",), init=ones)
+    ini.add("dt_bias", (nh,), ("heads",), init=zeros)
+    ini.add("out_proj", (d_in, d), ("heads_mix", "embed"))
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_in, n = s.d_inner, s.d_state
+    nh = d_in // s.head_dim
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt = xbc_dt[..., : d_in + 2 * n], xbc_dt[..., d_in + 2 * n :]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv via shifted adds. xbc: (b, s, c), w: (4, c)."""
+    out = xbc * w[CONV_W - 1]
+    for i in range(1, CONV_W):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * w[CONV_W - 1 - i]
+    return out
+
+
+def ssd_train(p, cfg, x, *, chunk: int = 128):
+    """x: (b, s, d) -> (b, s, d).  s must be a multiple of ``chunk``."""
+    s_cfg = cfg.ssm
+    d_in, n, hp = s_cfg.d_inner, s_cfg.d_state, s_cfg.head_dim
+    nh = d_in // hp
+    b, slen, _ = x.shape
+    chunk = min(chunk, slen)
+    assert slen % chunk == 0, (slen, chunk)
+    dt_act = x.dtype
+
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_act))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_act)))
+    xs, B, C = xbc[..., :d_in], xbc[..., d_in : d_in + n], xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (b,s,nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (nh,) negative
+    log_decay = dt * a[None, None, :]  # (b,s,nh) = log a_t
+
+    nc = slen // chunk
+    xh = xs.reshape(b, nc, chunk, nh, hp)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    ld = log_decay.reshape(b, nc, chunk, nh)
+
+    cum = jnp.cumsum(ld, axis=2)  # (b,nc,q,nh) cumulative log decay
+    # intra-chunk: y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc).astype(jnp.float32)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,q,k,nh)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    W = scores[..., None] * L  # (b,nc,q,k,nh)
+    dtx = (dtc[..., None] * xh.astype(jnp.float32))  # (b,nc,k,nh,hp)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", W, dtx)
+
+    # chunk states: S_c = sum_j exp(cum_end - cum_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,nh)
+    Sc = jnp.einsum("bckn,bckh,bckhp->bchnp", Bc.astype(jnp.float32), dtc * decay_to_end, xh.astype(jnp.float32))
+
+    # inter-chunk scan: carry running state across chunks
+    total_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,nh)
+
+    def step(carry, inp):
+        s_chunk, tdec = inp  # (b,h,n,p), (b,h)
+        new = carry * tdec[..., None, None] + s_chunk
+        return new, carry  # emit state *entering* this chunk
+
+    init = jnp.zeros((b, nh, n, hp), jnp.float32)
+    _, S_in = jax.lax.scan(
+        step, init, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(total_decay, 1, 0))
+    )
+    S_in = jnp.moveaxis(S_in, 0, 1)  # (b,nc,h,n,p) state entering each chunk
+
+    # inter-chunk contribution: y[i] += C_i . (exp(cum_i) * S_in)
+    decay_from_start = jnp.exp(cum)  # (b,nc,q,nh)
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc.astype(jnp.float32), S_in, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(b, slen, nh, hp)
+    y = y + p["d_skip"][None, None, :, None] * xs.reshape(b, slen, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, slen, d_in).astype(dt_act) * jax.nn.silu(z)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_act))
+
+
+def init_ssd_state(cfg, batch, dtype):
+    s = cfg.ssm
+    nh = s.d_inner // s.head_dim
+    return {
+        "conv": jnp.zeros((batch, CONV_W - 1, s.d_inner + 2 * s.d_state), dtype),
+        "ssm": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+    }
+
+
+def ssd_state_specs():
+    return {"conv": ("batch", None, "heads_mix"), "ssm": ("batch", "heads", None, None)}
+
+
+def read_state(state, layer_idx):
+    """Slice one layer's state from a stacked (L, ...) state tree."""
+    import jax as _jax
+
+    if layer_idx is None:
+        return state
+    return _jax.tree.map(
+        lambda s: _jax.lax.dynamic_index_in_dim(s, layer_idx, 0, keepdims=False), state
+    )
+
+
+def write_state(state, new, layer_idx):
+    import jax as _jax
+
+    if layer_idx is None:
+        return new
+    return _jax.tree.map(
+        lambda s, n: _jax.lax.dynamic_update_index_in_dim(s, n.astype(s.dtype), layer_idx, 0),
+        state,
+        new,
+    )
+
+
+def ssd_decode(p, cfg, x, state):
+    """Single-token step. x: (b, 1, d) -> (y, new_state)."""
+    s_cfg = cfg.ssm
+    d_in, n, hp = s_cfg.d_inner, s_cfg.d_state, s_cfg.head_dim
+    nh = d_in // hp
+    b = x.shape[0]
+    dt_act = x.dtype
+
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_act))
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([state["conv"], xbc], axis=1)  # (b, 4, c)
+    w = p["conv_w"].astype(dt_act)
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", conv_in, w))[:, None]
+    new_conv = conv_in[:, 1:]
+
+    xs = conv_out[..., :d_in].reshape(b, nh, hp)
+    B = conv_out[..., d_in : d_in + n][:, 0]  # (b, n)
+    C = conv_out[..., d_in + n :][:, 0]
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,nh)
+    a = jnp.exp(dtv * -jnp.exp(p["a_log"].astype(jnp.float32)))  # (b,nh)
+
+    h = state["ssm"] * a[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", B.astype(jnp.float32), dtv, xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), h)
+    y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, d_in).astype(dt_act) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_act))
+    return out, {"conv": new_conv, "ssm": h}

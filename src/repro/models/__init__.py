@@ -1,0 +1,4 @@
+"""Config-driven model zoo."""
+from repro.models.config import EncoderSpec, ModelConfig, MoESpec, RGLRUSpec, SSMSpec
+
+__all__ = ["ModelConfig", "MoESpec", "SSMSpec", "RGLRUSpec", "EncoderSpec"]

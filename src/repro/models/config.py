@@ -1,0 +1,119 @@
+"""Architecture configuration — one dataclass covers all 10 assigned archs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "MoESpec", "SSMSpec", "RGLRUSpec", "EncoderSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMSpec:
+    d_inner: int
+    d_state: int
+    head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUSpec:
+    d_rnn: int
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Whisper-style encoder (the audio frontend itself is a stub: the input
+    spec supplies precomputed frame embeddings)."""
+
+    n_layers: int
+    n_ctx: int  # frames after the (stubbed) conv frontend
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    kind: str = "decoder"  # "decoder" | "encdec"
+    # per-layer block types, cycled over n_layers:
+    #   "global" (causal full attn) | "window" (sliding) | "ssd" | "rglru"
+    block_pattern: Tuple[str, ...] = ("global",)
+    window: Optional[int] = None
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SSMSpec] = None
+    rglru: Optional[RGLRUSpec] = None
+    qk_norm: bool = False
+    norm: str = "rmsnorm"  # "rmsnorm" | "layernorm"
+    mlp_act: str = "swiglu"  # "swiglu" | "gelu"
+    pos: str = "rope"  # "rope" | "sinusoidal" | "none"
+    rope_theta: float = 10000.0
+    encoder: Optional[EncoderSpec] = None
+    vision_tokens: int = 0  # VLM stub frontend: # of precomputed patch embeds
+    tie_embeddings: bool = False
+    act_dtype: str = "bfloat16"
+    # attention-score materialization dtype: fp32 for training (default);
+    # inference prefill can drop to bf16 — halves the softmax-chain HBM
+    # traffic of the XLA (non-Pallas) attention path (§Perf prefill study)
+    scores_dtype: str = "float32"
+    sqrt_unit: str = "exact"
+    remat: str = "block"  # "none" | "block" | "minimal"
+
+    # ------------------------------------------------------------------
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding tables pad the vocab to a 256 multiple so the 'vocab'
+        axis shards on any production mesh (MaxText convention).  Loss runs
+        over the padded logits (padded ids get ~uniform-random unembed rows);
+        decode slices back to the true vocab."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def blocks(self) -> Tuple[str, ...]:
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def uniform(self) -> bool:
+        return len(set(self.blocks)) == 1
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if no layer needs an unbounded dense KV cache."""
+        return all(b != "global" for b in self.blocks)
+
+    @property
+    def long_context_capable(self) -> bool:
+        """Policy for the long_500k shape (DESIGN.md §7): SSM/hybrid/windowed
+        archs run it; mostly-local archs with sparse global layers also run it
+        (bounded global KV count); pure full-attention archs skip."""
+        n_global = sum(b == "global" for b in self.blocks)
+        return n_global == 0 or (n_global / self.n_layers) <= 0.25
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self):
+        assert self.d_model > 0 and self.n_layers > 0
+        if any(b in ("global", "window") for b in self.blocks):
+            assert self.n_heads % self.n_kv_heads == 0
+        if "window" in self.blocks:
+            assert self.window
+        if "ssd" in self.blocks:
+            assert self.ssm is not None
+        if "rglru" in self.blocks:
+            assert self.rglru is not None
+        if self.kind == "encdec":
+            assert self.encoder is not None
+        return self

@@ -1,0 +1,495 @@
+"""Config-driven model zoo: decoder LMs (dense / MoE / SSM / hybrid / VLM)
+and encoder-decoder (Whisper-style), with scanned layer stacks for uniform
+architectures and unrolled stacks for mixed block patterns.
+
+Entry points:
+    init(cfg, key)                     -> (params, specs)
+    forward(params, cfg, batch)        -> (logits, aux)
+    init_cache(cfg, batch, cache_len)  -> (cache, specs)
+    decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+
+Batch dict keys:
+    tokens  (b, s) int32            — text tokens (decoder side)
+    vision  (b, n_vis, d) optional  — VLM stub frontend embeddings
+    audio   (b, n_ctx, d) optional  — whisper stub frontend embeddings
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.constraints import constrain
+from repro.layers import attention as attn
+from repro.layers import moe as moe_lib
+from repro.layers import rglru as rglru_lib
+from repro.layers import ssd as ssd_lib
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from repro.layers.param import DenseInit
+from repro.models.config import ModelConfig
+
+__all__ = ["init", "forward", "init_cache", "decode_step", "param_count"]
+
+
+def _act_dtype(cfg):
+    return jnp.dtype(cfg.act_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norm helpers (rmsnorm vs layernorm have different param layouts)
+# ---------------------------------------------------------------------------
+
+
+def _norm_init(ini, name, cfg):
+    if cfg.norm == "rmsnorm":
+        rmsnorm_init(ini, name, cfg.d_model)
+    else:
+        layernorm_init(ini, name, cfg.d_model)
+
+
+def _norm(p, name, x, cfg):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(p[name], x, sqrt_unit=cfg.sqrt_unit)
+    return layernorm(p[f"{name}_scale"], p[f"{name}_bias"], x, sqrt_unit=cfg.sqrt_unit)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: ModelConfig, block: str, key, *, cross: bool = False, abstract=False):
+    ini = DenseInit(key, abstract=abstract)
+    _norm_init(ini, "ln1", cfg)
+    sub_init = lambda: DenseInit(ini._next(), abstract=abstract)
+    if block in ("global", "window"):
+        a = sub_init()
+        attn.attention_init(a, cfg)
+        ini.sub("attn", *a.build())
+        _norm_init(ini, "ln2", cfg)
+        if cfg.moe is not None:
+            m = sub_init()
+            moe_lib.moe_init(m, cfg)
+            ini.sub("moe", *m.build())
+        else:
+            m = sub_init()
+            mlp_init(m, cfg)
+            ini.sub("mlp", *m.build())
+        if cross:
+            c = sub_init()
+            attn.attention_init(c, cfg)
+            ini.sub("xattn", *c.build())
+            _norm_init(ini, "lnx", cfg)
+    elif block == "ssd":
+        m = sub_init()
+        ssd_lib.ssd_init(m, cfg)
+        ini.sub("mixer", *m.build())
+    elif block == "rglru":
+        m = sub_init()
+        rglru_lib.rglru_init(m, cfg)
+        ini.sub("mixer", *m.build())
+        _norm_init(ini, "ln2", cfg)
+        m2 = sub_init()
+        mlp_init(m2, cfg)
+        ini.sub("mlp", *m2.build())
+    else:
+        raise ValueError(block)
+    return ini.build()
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_train(p, cfg, block, x, positions, *, enc_out=None):
+    x = constrain(x, ("batch", "seq", "embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if block in ("global", "window"):
+        h = _norm(p, "ln1", x, cfg)
+        mode = "causal" if block == "global" else "window"
+        h = attn.attention_train(
+            p["attn"], cfg, h, mode=mode, window=cfg.window, positions=positions
+        )
+        x = x + h
+        if enc_out is not None:
+            h = _norm(p, "lnx", x, cfg)
+            h = attn.attention_train(p["xattn"], cfg, h, mode="cross", kv_x=enc_out)
+            x = x + h
+        h = _norm(p, "ln2", x, cfg)
+        if cfg.moe is not None:
+            h, aux = moe_lib.moe_apply(p["moe"], cfg, h, capacity_factor=cfg.moe.capacity_factor)
+        else:
+            h = mlp_apply(p["mlp"], cfg, h)
+        x = x + h
+    elif block == "ssd":
+        x = x + ssd_lib.ssd_train(p["mixer"], cfg, _norm(p, "ln1", x, cfg))
+    elif block == "rglru":
+        x = x + rglru_lib.rglru_train(p["mixer"], cfg, _norm(p, "ln1", x, cfg))
+        x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg))
+    return constrain(x, ("batch", "seq", "embed")), aux
+
+
+def _remat_wrapper(cfg):
+    """Remat policy for the layer stack:
+      "none"      store everything (needs microbatching at scale)
+      "block"     full per-layer rematerialization (max recompute)
+      "minimal"   store everything EXCEPT attention scores (flash-style
+                  selective remat: bwd recomputes only the O(s^2) tensors)
+    """
+    if cfg.remat == "none":
+        return lambda f: f
+    if cfg.remat == "minimal":
+        policy = jax.checkpoint_policies.save_anything_except_these_names("attn_scores")
+        return lambda f: jax.checkpoint(f, policy=policy)
+    return lambda f: jax.checkpoint(f)
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper-style, bidirectional)
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_init(cfg, key, *, abstract=False):
+    ini = DenseInit(key, abstract=abstract)
+    _norm_init(ini, "ln1", cfg)
+    a = DenseInit(ini._next(), abstract=abstract)
+    attn.attention_init(a, cfg)
+    ini.sub("attn", *a.build())
+    _norm_init(ini, "ln2", cfg)
+    m = DenseInit(ini._next(), abstract=abstract)
+    mlp_init(m, cfg)
+    ini.sub("mlp", *m.build())
+    return ini.build()
+
+
+def _enc_layer(p, cfg, x):
+    h = _norm(p, "ln1", x, cfg)
+    x = x + attn.attention_train(p["attn"], cfg, h, mode="bidir")
+    x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg))
+    return x
+
+
+def _sinusoidal(n, d):
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(angle), np.cos(angle)], -1), jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Full-model init
+# ---------------------------------------------------------------------------
+
+
+def _stacked_init(init_fn, key, n, *, abstract=False):
+    """vmap an init over n layers -> params with leading 'layers' axis."""
+    if abstract:
+        layer, specs = init_fn(key)
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), layer
+        )
+        specs = jax.tree.map(
+            lambda s: ("layers", *s),
+            specs,
+            is_leaf=lambda s: isinstance(s, tuple)
+            and all(isinstance(e, (str, type(None))) for e in s),
+        )
+        return params, specs
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    _, specs = init_fn(key)
+    specs = jax.tree.map(
+        lambda s: ("layers", *s),
+        specs,
+        is_leaf=lambda s: isinstance(s, tuple) and all(isinstance(e, (str, type(None))) for e in s),
+    )
+    return params, specs
+
+
+def init(cfg: ModelConfig, key, *, abstract: bool = False):
+    cfg.validate()
+    ini = DenseInit(key, abstract=abstract)
+    vp = cfg.padded_vocab
+    ini.add("embed", (vp, cfg.d_model), ("vocab", "embed"), scale=float(np.sqrt(cfg.d_model)))
+    if not cfg.tie_embeddings:
+        ini.add("unembed", (cfg.d_model, vp), ("embed", "vocab"))
+    _norm_init(ini, "ln_f", cfg)
+    if cfg.vision_tokens:
+        # VLM stub frontend: a projection from precomputed patch embeddings
+        ini.add("vision_proj", (cfg.d_model, cfg.d_model), ("embed", None))
+
+    cross = cfg.kind == "encdec"
+    blocks = cfg.blocks
+    if cfg.uniform:
+        layer_fn = lambda k: _layer_init(cfg, blocks[0], k, cross=cross, abstract=abstract)
+        params, specs = _stacked_init(layer_fn, ini._next(), cfg.n_layers, abstract=abstract)
+        ini.sub("layers", params, specs)
+    else:
+        layers_p, layers_s = [], []
+        for b in blocks:
+            p, s = _layer_init(cfg, b, ini._next(), cross=cross, abstract=abstract)
+            layers_p.append(p)
+            layers_s.append(s)
+        ini.sub("layers", layers_p, layers_s)
+
+    if cross:
+        enc_fn = lambda k: _enc_layer_init(cfg, k, abstract=abstract)
+        pe, se = _stacked_init(enc_fn, ini._next(), cfg.encoder.n_layers, abstract=abstract)
+        ini.sub("encoder", pe, se)
+        e2 = DenseInit(ini._next(), abstract=abstract)
+        _norm_init(e2, "enc_ln_f", cfg)
+        pp, ss = e2.build()
+        ini.sub("enc_extra", pp, ss)
+    return ini.build()
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _run_encoder(params, cfg, audio):
+    x = audio.astype(_act_dtype(cfg))
+    x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+
+    def body(x, p):
+        return _enc_layer(p, cfg, x), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return _norm(params["enc_extra"], "enc_ln_f", x, cfg)
+
+
+def _embed_inputs(params, cfg, batch):
+    dt = _act_dtype(cfg)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if cfg.vision_tokens:
+        v = batch["vision"].astype(dt)
+        v = jnp.einsum("bnd,de->bne", v, params["vision_proj"].astype(dt))
+        x = jnp.concatenate([v, x], axis=1)
+    if cfg.pos == "sinusoidal":
+        x = x + _sinusoidal(x.shape[1], cfg.d_model).astype(dt)[None]
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, *, return_hidden: bool = False):
+    """Returns (logits over the token positions, aux dict).  With
+    ``return_hidden`` the unembed matmul is left to the caller (the train
+    loss computes it in sequence chunks so the fp32 logits buffer is never
+    materialized whole — see steps.loss_fn)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    enc_out = None
+    if cfg.kind == "encdec":
+        enc_out = _run_encoder(params, cfg, batch["audio"])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    blocks = cfg.blocks
+    remat_wrap = _remat_wrapper(cfg)
+    if cfg.uniform:
+
+        def body(carry, p):
+            x, aux = carry
+            x, a = _layer_train(p, cfg, blocks[0], x, positions, enc_out=enc_out)
+            return (x, aux + a), None
+
+        body = remat_wrap(body)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    else:
+        for p, b in zip(params["layers"], blocks):
+            fn = functools.partial(_layer_train, cfg=cfg, block=b, positions=positions, enc_out=enc_out)
+            wrapped = remat_wrap(lambda p, x, fn=fn: fn(p, x=x))
+            x, a = wrapped(p, x)
+            aux_total = aux_total + a
+
+    x = _norm(params, "ln_f", x, cfg)
+    if cfg.vision_tokens:
+        x = x[:, cfg.vision_tokens :]  # logits over text positions only
+    aux = {"moe_aux": aux_total / max(1, len(blocks))}
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ).astype(x.dtype)
+    if return_hidden:
+        return (x, unembed), aux
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / state init
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache(cfg, block, batch, cache_len, dtype, quantized):
+    if block == "global":
+        c = attn.init_kv_cache(cfg, batch, cache_len, dtype, quantized=quantized)
+        s = attn.kv_cache_specs(quantized)
+    elif block == "window":
+        c = attn.init_kv_cache(
+            cfg, batch, min(cache_len, cfg.window), dtype, quantized=quantized
+        )
+        s = attn.kv_cache_specs(quantized)
+    elif block == "ssd":
+        c = ssd_lib.init_ssd_state(cfg, batch, dtype)
+        s = ssd_lib.ssd_state_specs()
+    elif block == "rglru":
+        c = rglru_lib.init_rglru_state(cfg, batch, dtype)
+        s = rglru_lib.rglru_state_specs()
+    else:
+        raise ValueError(block)
+    return c, s
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, cache_len: int, *, quantized=False, abstract=False
+):
+    """Returns (cache, specs).  Uniform stacks get a leading 'layers' axis."""
+    dtype = _act_dtype(cfg)
+    mk = (
+        (lambda shape, a: jax.ShapeDtypeStruct(shape, a.dtype))
+        if abstract
+        else (lambda shape, a: jnp.zeros(shape, a.dtype))
+    )
+    if cfg.uniform:
+        c, s = _layer_cache(cfg, cfg.blocks[0], batch, cache_len, dtype, quantized)
+        c = jax.tree.map(lambda a: mk((cfg.n_layers, *a.shape), a), c)
+        s = jax.tree.map(
+            lambda sp: ("layers", *sp),
+            s,
+            is_leaf=lambda sp: isinstance(sp, tuple)
+            and all(isinstance(e, (str, type(None))) for e in sp),
+        )
+        return c, s
+    caches, specs = [], []
+    for b in cfg.blocks:
+        c, s = _layer_cache(cfg, b, batch, cache_len, dtype, quantized)
+        if abstract:
+            c = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), c)
+        caches.append(c)
+        specs.append(s)
+    return caches, specs
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+
+def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None):
+    """One decoder layer step.  With ``layer_idx`` the cache tree is the full
+    stacked (L, ...) carry and only this layer's line is touched (in-place
+    DUS — the production decode pattern: per-step HBM traffic is one layer
+    read + one token write, not a cache re-materialization)."""
+    if block in ("global", "window"):
+        h = _norm(p, "ln1", x, cfg)
+        h, cache = attn.attention_decode(
+            p["attn"], cfg, h, cache, pos,
+            window=cfg.window if block == "window" else None,
+            layer_idx=layer_idx,
+        )
+        x = x + h
+        if cross_kv is not None:
+            x = x + attn.cross_attention_decode(p["xattn"], cfg, _norm(p, "lnx", x, cfg), cross_kv)
+        h = _norm(p, "ln2", x, cfg)
+        if cfg.moe is not None:
+            h, _ = moe_lib.moe_apply(p["moe"], cfg, h, capacity_factor=cfg.moe.capacity_factor)
+        else:
+            h = mlp_apply(p["mlp"], cfg, h)
+        x = x + h
+    elif block == "ssd":
+        st = ssd_lib.read_state(cache, layer_idx)
+        h, new_st = ssd_lib.ssd_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg), st)
+        cache = ssd_lib.write_state(cache, new_st, layer_idx)
+        x = x + h
+    elif block == "rglru":
+        st = ssd_lib.read_state(cache, layer_idx)
+        h, new_st = rglru_lib.rglru_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg), st)
+        cache = ssd_lib.write_state(cache, new_st, layer_idx)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg))
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
+    """tokens: (b, 1) int32; pos: scalar int32 position of this token.
+
+    Returns (logits (b, 1, vocab), new_cache).
+    """
+    dt = _act_dtype(cfg)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    if cfg.pos == "sinusoidal":
+        # absolute sinusoid at ``pos``
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
+        x = x + pe.astype(dt)
+
+    blocks = cfg.blocks
+    if cfg.uniform:
+        # stacked cache rides in the CARRY and is updated in place per layer
+        idxs = jnp.arange(cfg.n_layers)
+        if cross_kv is not None:
+
+            def body(carry, layer):
+                x, c = carry
+                p, ckv, i = layer
+                x, c = _layer_decode(
+                    p, cfg, blocks[0], x, c, pos, cross_kv=ckv, layer_idx=i
+                )
+                return (x, c), None
+
+            (x, new_cache), _ = jax.lax.scan(
+                body, (x, cache), (params["layers"], cross_kv, idxs)
+            )
+        else:
+
+            def body(carry, layer):
+                x, c = carry
+                p, i = layer
+                x, c = _layer_decode(p, cfg, blocks[0], x, c, pos, layer_idx=i)
+                return (x, c), None
+
+            (x, new_cache), _ = jax.lax.scan(body, (x, cache), (params["layers"], idxs))
+    else:
+        new_cache = []
+        for p, b, c in zip(params["layers"], blocks, cache):
+            x, c = _layer_decode(p, cfg, b, x, c, pos, cross_kv=cross_kv)
+            new_cache.append(c)
+
+    x = _norm(params, "ln_f", x, cfg)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    return logits[..., : cfg.vocab], new_cache
+
+
+def precompute_cross(params, cfg: ModelConfig, audio):
+    """Enc-dec serving: run the encoder once and build the stacked per-layer
+    cross-attention K/V (consumed by decode_step's ``cross_kv``)."""
+    enc_out = _run_encoder(params, cfg, audio)
+
+    def per_layer(p):
+        return attn.precompute_cross_kv(p["xattn"], cfg, enc_out)
+
+    return jax.vmap(per_layer, in_axes=0)(params["layers"]), enc_out
+
+
+def cross_kv_specs():
+    return {
+        "ck": ("layers", "batch", "kv_seq", "kv_heads", None),
+        "cv": ("layers", "batch", "kv_seq", "kv_heads", None),
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

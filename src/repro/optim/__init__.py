@@ -1,0 +1,20 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    global_norm_clip,
+    opt_state_specs,
+)
+from repro.optim.compression import compress_decompress, compress_init
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "global_norm_clip",
+    "opt_state_specs",
+    "compress_decompress",
+    "compress_init",
+]

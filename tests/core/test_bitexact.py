@@ -1,0 +1,125 @@
+"""Bit-exactness of the E2AFS FP16 datapath against the paper's Table 2."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import e2afs_sqrt
+from repro.core.numerics import FP16
+
+
+def _fp16_from_bits(b):
+    return np.uint16(b).view(np.float16)
+
+
+def _bits(y):
+    return int(np.asarray(y).view(np.uint16))
+
+
+class TestTable2WorkedExample:
+    """Paper Table 2: M = 0x785A (35654 dec as 2^15(1+90/1024)) -> 196.125."""
+
+    def test_input_encoding(self):
+        x = _fp16_from_bits(0x785A)
+        # sign 0, exp 11110 (30), man 0001011010 (90)
+        assert int(np.float16(x).view(np.uint16)) >> 10 == 0b011110
+        assert int(np.float16(x).view(np.uint16)) & 0x3FF == 90
+
+    def test_output_bits(self):
+        x = _fp16_from_bits(0x785A)
+        y = e2afs_sqrt(jnp.asarray([x]))[0]
+        # paper: 0 10110 1000100001
+        assert _bits(y) == 0b0101101000100001
+
+    def test_output_value(self):
+        x = _fp16_from_bits(0x785A)
+        y = e2afs_sqrt(jnp.asarray([x]))[0]
+        assert float(y) == 196.125  # 2^7 * (1 + 545/1024)
+
+
+class TestRegionFormulas:
+    """Each Table-1 region agrees with its closed-form (truncated to Q10)."""
+
+    @pytest.mark.parametrize("exp,man", [(15, 100), (17, 500), (21, 0), (29, 511)])
+    def test_even_r_low_y(self, exp, man):
+        # exp odd -> r = exp-15 even
+        x = _fp16_from_bits((exp << 10) | man)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        r = exp - 15
+        expected = 2.0 ** (r // 2) * (1 + (man // 2) / 1024)
+        assert y == expected
+
+    @pytest.mark.parametrize("exp,man", [(15, 512), (19, 800), (29, 1023)])
+    def test_even_r_high_y(self, exp, man):
+        x = _fp16_from_bits((exp << 10) | man)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        r = exp - 15
+        expected = 2.0 ** (r // 2) * (1 + ((man // 2) - 46) / 1024)
+        assert y == expected
+
+    @pytest.mark.parametrize("exp,man", [(16, 90), (22, 0), (30, 511)])
+    def test_odd_r_low_y(self, exp, man):
+        x = _fp16_from_bits((exp << 10) | man)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        r = exp - 15
+        t = 1024 + man // 4
+        expected = 2.0 ** ((r - 1) // 2) * (t + t // 2) / 1024
+        assert y == expected
+
+    @pytest.mark.parametrize("exp,man", [(16, 512), (24, 700), (30, 1023)])
+    def test_odd_r_high_y(self, exp, man):
+        x = _fp16_from_bits((exp << 10) | man)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        r = exp - 15
+        t = 1024 + (man + 341) // 4
+        expected = 2.0 ** ((r - 1) // 2) * (t + t // 2) / 1024
+        assert y == expected
+
+
+class TestDatapathInvariants:
+    def test_no_renormalization_needed_fp16(self):
+        """Paper-datapath invariant: mantissa adder result in [1024, 2047]."""
+        exps = np.arange(1, 31, dtype=np.uint32)
+        mans = np.arange(1024, dtype=np.uint32)
+        bits = ((exps[:, None] << 10) | mans[None, :]).reshape(-1)
+        x = bits.astype(np.uint16).view(np.float16)
+        y = np.asarray(e2afs_sqrt(jnp.asarray(x)))
+        out_bits = y.view(np.uint16)
+        # every output is a positive normal with a valid mantissa (res-1024
+        # in [0,1023] means no overflow ever fired; exponent never saturates)
+        out_exp = (out_bits >> 10) & 0x1F
+        assert out_exp.min() >= 1 and out_exp.max() <= 30
+
+    def test_negative_exponent_parity(self):
+        """r < 0 parity handling: sqrt(2^-3) uses the odd path."""
+        x = np.float16(2.0**-3)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        # odd path, Y=0: 2^{(-3-1)/2} * 1.5 = 0.375
+        assert y == 0.375
+
+    def test_even_negative_exponent(self):
+        x = np.float16(2.0**-4)
+        y = float(e2afs_sqrt(jnp.asarray([x]))[0])
+        assert y == 0.25
+
+    def test_exact_powers_of_four(self):
+        for k in range(-6, 7):
+            x = np.float16(4.0**k)
+            assert float(e2afs_sqrt(jnp.asarray([x]))[0]) == 2.0**k
+
+
+class TestSpecials:
+    def test_zero(self):
+        assert float(e2afs_sqrt(jnp.asarray([np.float16(0.0)]))[0]) == 0.0
+
+    def test_inf(self):
+        assert np.isinf(float(e2afs_sqrt(jnp.asarray([np.float16(np.inf)]))[0]))
+
+    def test_nan(self):
+        assert np.isnan(float(e2afs_sqrt(jnp.asarray([np.float16(np.nan)]))[0]))
+
+    def test_negative(self):
+        assert np.isnan(float(e2afs_sqrt(jnp.asarray([np.float16(-1.0)]))[0]))
+
+    def test_subnormal_ftz(self):
+        sub = _fp16_from_bits(0x0001)
+        assert float(e2afs_sqrt(jnp.asarray([sub]))[0]) == 0.0

@@ -1,0 +1,86 @@
+"""Hypothesis property tests for the approximate sqrt units."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import available_units, get_unit
+
+FP16_MIN_NORMAL = float(np.float16(6.104e-05))  # 2^-14
+finite_pos_f16 = st.floats(
+    min_value=FP16_MIN_NORMAL,
+    max_value=65024.0,
+    allow_nan=False,
+    allow_infinity=False,
+    width=16,
+)
+
+
+def _as16(v):
+    return jnp.asarray([np.float16(v)])
+
+
+@settings(max_examples=300, deadline=None)
+@given(x=finite_pos_f16)
+def test_e2afs_bounded_relative_error(x):
+    """Worst-case relative error of the E2AFS datapath is < 6.1% (the
+    odd-r, Y=0 corner: 1.5/sqrt(2) - 1 = 6.066%)."""
+    y = float(get_unit("e2afs").sqrt(_as16(x))[0])
+    ref = float(np.sqrt(np.float64(x)))
+    assert abs(y - ref) / ref < 0.0612
+
+
+@settings(max_examples=300, deadline=None)
+@given(x=finite_pos_f16)
+def test_scale_by_four_equivariance(x):
+    """sqrt(4x) == 2*sqrt(x) exactly in the datapath: x4 keeps exponent
+    parity and mantissa, so the output differs only by one exponent step."""
+    unit = get_unit("e2afs")
+    x16 = np.float16(x)
+    if float(x16) * 4.0 > 60000.0 or float(x16) == 0.0:
+        return
+    y1 = float(unit.sqrt(_as16(x16))[0])
+    y4 = float(unit.sqrt(_as16(np.float16(float(x16) * 4.0)))[0])
+    assert y4 == 2.0 * y1
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=finite_pos_f16)
+def test_all_units_positive_finite(x):
+    for name in available_units():
+        y = float(get_unit(name).sqrt(_as16(x))[0])
+        assert np.isfinite(y) and y > 0.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=finite_pos_f16)
+def test_rsqrt_consistent_with_sqrt(x):
+    """E2AFS-R output stays within 7% of 1/sqrt."""
+    y = float(get_unit("e2afs").rsqrt(_as16(x))[0])
+    ref = 1.0 / float(np.sqrt(np.float64(x)))
+    assert abs(y - ref) / ref < 0.07
+
+
+@settings(max_examples=200, deadline=None)
+@given(x=st.floats(min_value=1e-30, max_value=1e30, allow_nan=False))
+def test_generalized_fp32_bounded_error(x):
+    """The bf16/fp32 generalization keeps the same worst-case bound."""
+    y = float(get_unit("e2afs").sqrt(jnp.asarray([x], jnp.float32))[0])
+    ref = float(np.sqrt(np.float64(np.float32(x))))
+    assert abs(y - ref) / ref < 0.0612
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    x=st.floats(min_value=FP16_MIN_NORMAL, max_value=60000.0, allow_nan=False, width=16),
+    scale=st.sampled_from([0.25, 4.0, 16.0, 64.0]),
+)
+def test_monotone_across_octave_pairs(x, scale):
+    """Although the PWL breaks local monotonicity at region boundaries,
+    scaling the input up always scales the output up."""
+    unit = get_unit("e2afs")
+    x2 = float(np.float16(x)) * scale
+    if not (FP16_MIN_NORMAL < x2 < 60000.0):
+        return
+    y1 = float(unit.sqrt(_as16(x))[0])
+    y2 = float(unit.sqrt(_as16(x2))[0])
+    assert (y2 > y1) == (scale > 1.0)

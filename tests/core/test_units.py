@@ -1,0 +1,67 @@
+"""SqrtUnit registry and dtype coverage."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import available_units, get_unit
+
+
+def test_registry_contents():
+    assert set(available_units()) == {"exact", "e2afs", "esas", "cwaha4", "cwaha8"}
+
+
+def test_unknown_unit_raises():
+    with pytest.raises(ValueError, match="unknown sqrt unit"):
+        get_unit("newton")
+
+
+@pytest.mark.parametrize("name", ["e2afs", "esas", "cwaha4", "cwaha8", "exact"])
+@pytest.mark.parametrize("dtype", [jnp.float16, jnp.bfloat16, jnp.float32])
+def test_dtype_roundtrip(name, dtype):
+    unit = get_unit(name)
+    x = jnp.asarray([0.5, 1.0, 2.0, 3.75, 1234.5], dtype)
+    y = unit.sqrt(x)
+    assert y.dtype == jnp.dtype(dtype)
+    rel = np.abs(np.asarray(y, np.float64) - np.sqrt(np.asarray(x, np.float64)))
+    rel /= np.sqrt(np.asarray(x, np.float64))
+    assert rel.max() < 0.07
+
+
+@pytest.mark.parametrize("name", ["e2afs", "exact"])
+def test_rsqrt_native(name):
+    unit = get_unit(name)
+    x = jnp.asarray([0.25, 1.5, 9.0, 400.0], jnp.float32)
+    r = unit.rsqrt(x)
+    rel = np.abs(np.asarray(r, np.float64) * np.sqrt(np.asarray(x, np.float64)) - 1.0)
+    assert rel.max() < 0.02
+
+
+def test_rsqrt_fallback_composes():
+    unit = get_unit("cwaha8")
+    x = jnp.asarray([4.0], jnp.float32)
+    assert abs(float(unit.rsqrt(x)[0]) - 0.5) < 0.05
+
+
+def test_unit_under_jit_and_grad_free():
+    import jax
+
+    unit = get_unit("e2afs")
+    f = jax.jit(unit.sqrt)
+    x = jnp.asarray([2.0, 8.0], jnp.float32)
+    np.testing.assert_allclose(np.asarray(f(x)), np.asarray(unit.sqrt(x)))
+
+
+def test_vmap_compatible():
+    import jax
+
+    unit = get_unit("e2afs")
+    x = jnp.ones((4, 8), jnp.float32) * 2.0
+    y = jax.vmap(unit.sqrt)(x)
+    assert y.shape == (4, 8)
+
+
+def test_rsqrt_specials():
+    unit = get_unit("e2afs")
+    x = jnp.asarray([0.0, np.inf], jnp.float32)
+    r = unit.rsqrt(x)
+    assert np.isinf(float(r[0])) and float(r[1]) == 0.0

@@ -1,0 +1,91 @@
+"""Pure-python unit tests for the logical-axis sharding machinery."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.constraints import logical_to_spec
+from repro.distributed.sharding import divisible_spec, serve_rules, train_rules
+
+
+@pytest.fixture
+def mesh():
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+class TestLogicalToSpec:
+    RULES = {"embed": ("pod", "data"), "heads": "model", "mlp": "model", "batch": ("data",)}
+
+    def test_basic_mapping(self):
+        assert logical_to_spec(("embed", "heads", None), self.RULES) == P(
+            ("pod", "data"), "model", None
+        )
+
+    def test_axis_claimed_once(self):
+        # second claimant of 'model' degrades to replication
+        spec = logical_to_spec(("heads", "mlp"), self.RULES)
+        assert spec == P("model", None)
+
+    def test_unknown_axis_replicates(self):
+        assert logical_to_spec(("nope", None), self.RULES) == P(None, None)
+
+
+class TestDivisibleSpec:
+    def _mesh(self, shape=(4, 8), axes=("data", "model")):
+        n = int(np.prod(shape))
+        dev = np.asarray([jax.devices()[0]] * n).reshape(shape)
+        return Mesh(dev, axes)
+
+    def test_indivisible_dim_replicates(self):
+        mesh = self._mesh()
+        spec = divisible_spec(P("model", None), (10, 3), mesh)  # 10 % 8 != 0
+        assert spec == P(None, None)
+
+    def test_divisible_dim_kept(self):
+        mesh = self._mesh()
+        assert divisible_spec(P("model", None), (16, 3), mesh) == P("model", None)
+
+    def test_tuple_axes_partial_keep(self):
+        mesh = self._mesh()
+        # 8 divides by data(4) but then not by model(8): keep only data
+        spec = divisible_spec(P(("data", "model"), None), (8, 3), mesh)
+        assert spec == P("data", None)
+
+
+class TestRuleTables:
+    def _mesh(self, shape=(16, 16), axes=("data", "model")):
+        dev = np.asarray([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+        return Mesh(dev, axes)
+
+    def test_train_rules_fsdp_tp(self):
+        cfg = get_config("qwen3-4b")
+        r = train_rules(cfg, self._mesh())
+        assert r["embed"] == ("data",) and r["heads"] == "model"
+        assert r["batch"] == ("data",)
+
+    def test_train_rules_moe_ep(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        r = train_rules(cfg, self._mesh())
+        assert r["expert"] == "model"  # 128 % 16 == 0
+        cfg2 = get_config("mixtral-8x22b")
+        r2 = train_rules(cfg2, self._mesh())
+        assert r2["expert"] is None  # 8 % 16 != 0 -> replicate experts
+
+    def test_serve_rules_never_shard_kv_seq(self):
+        for arch in ("qwen3-4b", "deepseek-67b", "gemma3-1b"):
+            r = serve_rules(get_config(arch), self._mesh())
+            assert r["kv_seq"] is None  # the DUS-on-sharded-dim trap (§Perf)
+
+    def test_serve_rules_kv_mesh(self):
+        cfg = get_config("deepseek-67b")
+        mesh = self._mesh((16, 8, 2), ("data", "kv", "qg"))
+        r = serve_rules(cfg, mesh)
+        assert r["kv_heads"] == "kv"
+        assert r["heads"] == ("kv", "qg")
+
+    def test_seq_parallel_toggles_seq(self):
+        cfg = get_config("qwen3-4b")
+        assert train_rules(cfg, self._mesh())["seq"] is None
+        assert train_rules(cfg, self._mesh(), seq_parallel=True)["seq"] == "model"

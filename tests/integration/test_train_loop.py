@@ -1,0 +1,74 @@
+"""Trainer integration: loss decreases, checkpoint-restart equivalence
+(fault tolerance), straggler handling, grad compression end-to-end."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.launch.train import train_loop
+
+
+def test_loss_decreases_smoke():
+    _, _, losses = train_loop(
+        "qwen3-4b", smoke=True, steps=30, seq=64, batch=4, sqrt_unit="exact",
+        log_every=1000,
+    )
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_e2afs_trains_comparably():
+    """Error-tolerance at the training level: the approximate unit's loss
+    curve tracks the exact one."""
+    _, _, le = train_loop("qwen3-4b", smoke=True, steps=25, seq=64, batch=4,
+                          sqrt_unit="exact", log_every=1000)
+    _, _, la = train_loop("qwen3-4b", smoke=True, steps=25, seq=64, batch=4,
+                          sqrt_unit="e2afs", log_every=1000)
+    assert np.mean(la[-5:]) < np.mean(la[:5]) - 0.1  # it learns
+    assert abs(np.mean(la[-5:]) - np.mean(le[-5:])) < 0.5  # and tracks exact
+
+
+def test_restart_resumes_exactly(tmp_path):
+    """Kill-and-restart produces the same final state as an uninterrupted
+    run (deterministic data + checkpointed optimizer state)."""
+    d1 = tmp_path / "full"
+    _, _, l_full = train_loop("qwen3-4b", smoke=True, steps=12, seq=32, batch=2,
+                              ckpt_dir=str(d1), ckpt_every=6, log_every=1000)
+    # interrupted run: crash after 6 steps, then a fresh process-equivalent
+    # resume (same total schedule — the crash doesn't change hyperparams)
+    d2 = tmp_path / "int"
+    train_loop("qwen3-4b", smoke=True, steps=12, seq=32, batch=2,
+               ckpt_dir=str(d2), ckpt_every=6, log_every=1000, abort_after=6)
+    _, _, l_resumed = train_loop("qwen3-4b", smoke=True, steps=12, seq=32, batch=2,
+                                 ckpt_dir=str(d2), ckpt_every=6, log_every=1000)
+    # the resumed run replays steps 6..12 identically
+    np.testing.assert_allclose(l_resumed[-1], l_full[-1], rtol=1e-4)
+
+
+def test_straggler_event_checkpoints(tmp_path):
+    d = tmp_path / "s"
+    train_loop("qwen3-4b", smoke=True, steps=8, seq=32, batch=2,
+               ckpt_dir=str(d), ckpt_every=100, log_every=1000,
+               inject_straggler_at=3)
+    from repro.checkpoint import latest_step
+
+    # straggler at step 3 forced checkpoint step-4 (plus the final step-8)
+    steps = {int(p.name.split("-")[1]) for p in d.iterdir() if p.name.startswith("step-")}
+    assert 4 in steps and 8 in steps
+    hb = json.loads((d / "heartbeat.json").read_text())
+    assert len(hb) == 8 and all("wall_s" in h for h in hb)
+
+
+def test_compressed_grads_train(tmp_path):
+    _, _, losses = train_loop("qwen3-4b", smoke=True, steps=20, seq=64, batch=4,
+                              compress=True, log_every=1000)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.05
+
+
+def test_microbatched_matches_full_batch_loss_scale():
+    _, _, l1 = train_loop("qwen3-4b", smoke=True, steps=6, seq=32, batch=4,
+                          microbatches=1, log_every=1000)
+    _, _, l2 = train_loop("qwen3-4b", smoke=True, steps=6, seq=32, batch=4,
+                          microbatches=2, log_every=1000)
+    # same data, averaged-gradient accumulation: losses track closely
+    assert abs(l1[0] - l2[0]) < 0.05
+    assert abs(l1[-1] - l2[-1]) < 0.3

@@ -1,0 +1,44 @@
+"""Dry-run machinery at CI scale: the same lowering path as the production
+512-chip run, on a (2,2[,2]) host-device mesh in a subprocess (so the forced
+device count never leaks into other tests)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+
+# one representative per family x {train, decode} x both meshes
+# (kept to 4 cells so the subprocess compiles stay CI-friendly; the full
+# production grid is exercised by launch/dryrun.py --all)
+CASES = [
+    ("qwen3-4b", "train_4k"),          # dense + qk_norm
+    ("mixtral-8x22b", "train_4k"),     # MoE + SWA
+    ("mamba2-2.7b", "decode_32k"),     # SSM state decode
+    ("whisper-small", "decode_32k"),   # enc-dec with cross-attention
+]
+
+
+@pytest.mark.parametrize("arch,shape", CASES)
+def test_smoke_cell_lowers_on_multipod_mesh(arch, shape, tmp_path):
+    out = tmp_path / "cells"
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--mesh", "both",
+        "--smoke", "--out", str(out),
+    ]
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    import os
+
+    env.update({k: v for k, v in os.environ.items() if k not in env and k != "XLA_FLAGS"})
+    res = subprocess.run(cmd, capture_output=True, text=True, env=env, timeout=560)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    for mesh in ("single", "multi"):
+        rec = json.loads((out / f"{arch}_{shape}_{mesh}.json").read_text())
+        assert rec["status"] == "ok" or rec["status"].startswith("skip"), rec["status"]
+        if rec["status"] == "ok":
+            assert rec["n_chips"] == (4 if mesh == "single" else 8)
+            assert rec["hlo_flops_per_device"] > 0
+            assert rec["memory"]["peak_estimate_bytes"] > 0

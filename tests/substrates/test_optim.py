@@ -1,0 +1,91 @@
+"""Optimizer: AdamW vs analytic reference, clipping, schedules, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    compress_decompress,
+    compress_init,
+    cosine_lr,
+    global_norm_clip,
+)
+
+
+def _params():
+    return {"w": jnp.asarray([[1.0, -2.0], [3.0, 0.5]]), "b": jnp.asarray([0.1, -0.1])}
+
+
+def test_adamw_matches_manual_step():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      clip_norm=None, warmup_steps=1, total_steps=10**9)
+    p = _params()
+    g = jax.tree.map(jnp.ones_like, p)
+    st = adamw_init(p)
+    new_p, st2, _ = adamw_update(cfg, g, st, p)
+    # step 1: m_hat = g, v_hat = g^2 -> update = lr * 1/(1+eps)
+    lr1 = float(cosine_lr(cfg, jnp.int32(1)))
+    for leaf, new_leaf in zip(jax.tree.leaves(p), jax.tree.leaves(new_p)):
+        np.testing.assert_allclose(
+            np.asarray(new_leaf), np.asarray(leaf) - lr1, rtol=1e-5
+        )
+    assert int(st2["step"]) == 1
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = global_norm_clip(g, 1.0, "exact")
+    assert abs(float(norm) - 5.0) < 1e-5
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8], rtol=1e-4)
+
+
+def test_clip_with_e2afs_close_to_exact():
+    g = {"a": jnp.asarray([30.0, 40.0])}
+    _, n_exact = global_norm_clip(g, 1.0, "exact")
+    _, n_approx = global_norm_clip(g, 1.0, "e2afs")
+    assert abs(float(n_approx) - float(n_exact)) / float(n_exact) < 0.07
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_lr(cfg, jnp.int32(s))) for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup rises
+    assert lrs[2] >= lrs[3] >= lrs[4]  # cosine decays
+    assert lrs[4] < 0.05
+
+
+def test_compression_error_feedback_preserves_sum():
+    """Error feedback: quantization residual carried -> sum over steps of
+    decompressed grads converges to sum of true grads."""
+    key = jax.random.key(0)
+    g_true = {"w": jax.random.normal(key, (64,)) * 0.3}
+    resid = compress_init(g_true)
+    acc = jnp.zeros((64,))
+    for _ in range(30):
+        deq, resid = compress_decompress(g_true, resid)
+        acc = acc + deq["w"]
+    target = 30 * g_true["w"]
+    rel = float(jnp.abs(acc - target).max() / jnp.abs(target).max())
+    assert rel < 0.01
+
+
+def test_compression_single_step_bounded_error():
+    g = {"w": jnp.linspace(-1, 1, 128)}
+    deq, resid = compress_decompress(g, compress_init(g))
+    err = float(jnp.abs(deq["w"] - g["w"]).max())
+    assert err <= 1.0 / 127.0 + 1e-6
+
+
+def test_e2afs_adam_update_close_to_exact():
+    p = _params()
+    g = jax.tree.map(lambda x: 0.1 * jnp.ones_like(x), p)
+    st = adamw_init(p)
+    cfg_e = AdamWConfig(sqrt_unit="exact", clip_norm=None)
+    cfg_a = AdamWConfig(sqrt_unit="e2afs", clip_norm=None)
+    pe, _, _ = adamw_update(cfg_e, g, st, p)
+    pa, _, _ = adamw_update(cfg_a, g, jax.tree.map(jnp.copy, st), p)
+    for a, b in zip(jax.tree.leaves(pe), jax.tree.leaves(pa)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0.05, atol=1e-4)

@@ -1,0 +1,92 @@
+"""Derive shift-add constants for E2AFS-R (rsqrt) and CWAHA-k cluster tables.
+
+Follows the paper's own methodology (§2.0.2): fine grid search minimizing the
+mean error over each region, with slopes restricted to sums of <=2 power-of-two
+shifts (multiplier-free) and intercepts on the Q10 grid.
+
+Run:  PYTHONPATH=src python tools/fit_constants.py
+Paste the printed literals into src/repro/core/e2afs.py / cwaha.py.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+Q = 1024  # Q10 grid (FP16 mantissa); constants rescale exactly to bf16/fp32 grids
+
+
+def fit_region(target, y_lo, y_hi, *, objective="rel"):
+    """Fit  target(Y) ~= intercept - (Y>>a) - (Y>>b)  over [y_lo, y_hi).
+
+    Returns (a, b|None, intercept_q, err).  Slopes are non-positive (rsqrt and
+    sqrt mantissa residuals are decreasing in these parameterizations).
+    """
+    man = np.arange(int(y_lo * Q), int(y_hi * Q))
+    y = man / Q
+    t = target(y)
+    best = None
+    shift_opts = [(a, b) for a in range(1, 8) for b in list(range(a, 9)) + [None]]
+    shift_opts += [(None, None)]  # constant-only
+    for a, b in shift_opts:
+        slope = np.zeros_like(man)
+        if a is not None:
+            slope = slope + (man >> a)
+        if b is not None:
+            slope = slope + (man >> b)
+        resid = t * Q + slope  # ideal intercept per point
+        # candidate intercepts around the median of the residual
+        c0 = int(np.median(resid))
+        for c in range(c0 - 12, c0 + 13):
+            approx = (c - slope) / Q
+            err_abs = np.abs(approx - t)
+            err = float((err_abs / t).mean()) if objective == "rel" else float(err_abs.mean())
+            if best is None or err < best[0]:
+                best = (err, a, b, c)
+    err, a, b, c = best
+    return a, b, c, err
+
+
+def fit_rsqrt():
+    print("# E2AFS-R regions: mantissa_out = intercept_q - (man>>a) [- (man>>b)]")
+    print("# even r: target 2*(1+Y)^(-1/2) in (1.414,2]; out_exp = -r/2 - 1")
+    print("# odd  r: target sqrt(2)*(1+Y)^(-1/2) in (1,1.414]; out_exp = -(r+1)/2")
+    results = {}
+    for parity, tgt in (("even", lambda y: 2.0 / np.sqrt(1 + y)),
+                        ("odd", lambda y: np.sqrt(2.0) / np.sqrt(1 + y))):
+        for lo, hi, tag in ((0.0, 0.5, "lo"), (0.5, 1.0, "hi")):
+            a, b, c, err = fit_region(tgt, lo, hi)
+            results[(parity, tag)] = (a, b, c)
+            print(f"  ({parity},{tag}): a={a} b={b} intercept={c}  mean_rel_err={err:.5f}")
+    return results
+
+
+def fit_cwaha(k: int):
+    """CWAHA-k: piecewise-constant cluster table (see DESIGN.md §6)."""
+    print(f"# CWAHA-{k} cluster constants (Q10), index = top log2(k) mantissa bits")
+    even, odd = [], []
+    for i in range(k):
+        lo, hi = i / k, (i + 1) / k
+        y = np.arange(int(lo * Q), int(hi * Q)) / Q
+        # median minimizes the in-cluster MED for a monotone target
+        even.append(int(round(np.median(np.sqrt(1 + y)) * Q)))
+        odd.append(int(round(np.median(np.sqrt(2 * (1 + y))) * Q)))
+    print(f"  even={even}")
+    print(f"  odd ={odd}")
+    return even, odd
+
+
+def fit_esas_check():
+    """Report the level-1-only (reconstructed ESAS) regional errors for the log."""
+    y = np.arange(Q) / Q
+    even = np.abs((1 + y / 2) - np.sqrt(1 + y)) / np.sqrt(1 + y)
+    t = 1 + np.floor(y * Q / 4) / Q
+    odd = np.abs(1.5 * t - np.sqrt(2 * (1 + y))) / np.sqrt(2 * (1 + y))
+    print(f"# ESAS (level-1 only) mean rel err: even={even.mean():.5f} odd={odd.mean():.5f}")
+
+
+if __name__ == "__main__":
+    fit_rsqrt()
+    fit_cwaha(4)
+    fit_cwaha(8)
+    fit_esas_check()
