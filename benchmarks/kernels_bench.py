@@ -1,5 +1,11 @@
-"""Kernel micro-benchmarks (CPU interpret mode — correctness-side timings
-only; the TPU perf story lives in the roofline/§Perf analysis)."""
+"""Kernel micro-benchmarks, driven by the dispatch registry.
+
+Times every registered kernel's Pallas path against its pure-jnp reference
+on the resolved backend (CPU = interpret mode: correctness-side timings
+only; the TPU perf story lives in the roofline/§Perf analysis).  Set
+``REPRO_AUTOTUNE=1`` to sweep the registered tile candidates first — chosen
+blocks are persisted to the tuning cache and reported here.
+"""
 from __future__ import annotations
 
 import jax
@@ -7,25 +13,65 @@ import jax.numpy as jnp
 
 from benchmarks.common import md_table, save, time_call
 from repro.core import get_unit
+from repro.kernels import dispatch, tuning
+
+
+def _bench_inputs(name):
+    k = jax.random.key(0)
+    if name in ("e2afs_sqrt", "e2afs_rsqrt"):
+        x = jnp.abs(jax.random.normal(k, (512, 1024), jnp.float32)) + 0.1
+        return (x,), {}
+    if name == "rmsnorm":
+        x = jax.random.normal(k, (512, 1024), jnp.float32)
+        return (x, jnp.zeros((1024,))), {}
+    if name == "sobel":
+        return (jax.random.uniform(k, (258, 514), jnp.float32) * 255,), {}
+    if name == "adam":
+        ks = jax.random.split(k, 4)
+        shape = (256, 1024)
+        p, g = (jax.random.normal(kk, shape, jnp.float32) for kk in ks[:2])
+        m = jax.random.normal(ks[2], shape, jnp.float32) * 0.1
+        v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32)) * 0.01
+        return (p, g, m, v), dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, b1c=0.5, b2c=0.25)
+    raise ValueError(name)
 
 
 def run():
-    x = jnp.abs(jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)) + 0.1
+    backend = dispatch.resolve_backend()
     rows = []
-    payload = {}
+    payload = {"backend": backend}
+
+    # sqrt-unit datapaths (pure jnp, jitted) — the historical comparison set
+    x = jnp.abs(jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)) + 0.1
     for name in ("exact", "e2afs", "esas", "cwaha8"):
         unit = get_unit(name)
-        f = jax.jit(unit.sqrt)
-        us = time_call(f, x)
+        us = time_call(jax.jit(unit.sqrt), x)
         rows.append([f"sqrt[{name}]", f"{us:.0f}"])
         payload[f"sqrt_{name}"] = us
-    from repro.kernels.rmsnorm.ops import rmsnorm
-    from repro.kernels.rmsnorm.ref import ref_rmsnorm
 
-    scale = jnp.zeros((1024,))
-    rows.append(["rmsnorm[pallas-interpret]", f"{time_call(rmsnorm, x, scale):.0f}"])
-    rows.append(["rmsnorm[ref]", f"{time_call(jax.jit(ref_rmsnorm), x, scale):.0f}"])
-    print("\n== Kernel microbench (us/call, CPU; informational) ==")
+    # every registered kernel: pallas (dispatch-resolved) vs reference
+    tuned = tuning.autotune_enabled()
+    for name in dispatch.registered():
+        spec = dispatch.get(name)
+        args, kw = _bench_inputs(name)
+        us_pallas = time_call(dispatch.dispatch, name, *args, tune=tuned, **kw)
+        us_ref = time_call(jax.jit(spec.reference), *args, **kw)
+        block = tuning.choose_block(
+            name, spec.tiling.candidates, spec.tiling.default,
+            lambda b: dispatch.dispatch(name, *args, block=b, **kw),
+            args, interpret=backend == "interpret", tune=False,
+        )
+        rows.append([f"{name}[pallas-{backend}]", f"{us_pallas:.0f}"])
+        rows.append([f"{name}[ref]", f"{us_ref:.0f}"])
+        payload[f"{name}_pallas"] = us_pallas
+        payload[f"{name}_ref"] = us_ref
+        payload[f"{name}_block"] = list(block)
+
+    # back-compat key for trajectory plots — only valid for interpret timings
+    if backend == "interpret":
+        payload["rmsnorm_pallas_interpret"] = payload["rmsnorm_pallas"]
+
+    print(f"\n== Kernel microbench (us/call, backend={backend}; informational) ==")
     print(md_table(["kernel", "us/call"], rows))
     save("kernels_bench", payload)
     return payload

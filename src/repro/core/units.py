@@ -11,6 +11,15 @@ here, so the approximation is a first-class, config-selectable feature:
 ``rsqrt`` uses the dedicated E2AFS-R datapath for "e2afs"; baselines without a
 native rsqrt datapath (esas, cwaha) compose sqrt with an exact reciprocal
 (documented — they are sqrt-only designs in their papers).
+
+Two integration points with the kernel dispatch layer:
+
+* every approximate unit is wrapped with the dispatch layer's ``custom_jvp``
+  factories, so grads flow through the bit-level datapaths (the raw integer
+  paths otherwise yield silent zero gradients — unusable for training);
+* units with a Pallas route accept ``kernel=True`` (per call, or via
+  ``get_unit(name, kernel=True)`` as the default) to hit the fused/tiled
+  kernel path instead of the pure-jnp datapath.
 """
 from __future__ import annotations
 
@@ -21,8 +30,21 @@ from typing import Callable, Optional
 import jax
 
 from repro.core import cwaha, e2afs, esas, exact
+from repro.kernels.dispatch import make_differentiable_rsqrt, make_differentiable_sqrt
 
 __all__ = ["SqrtUnit", "get_unit", "available_units"]
+
+
+def _kernel_sqrt(x, **kw):
+    from repro.kernels.e2afs_sqrt import ops  # lazy: avoid import cycle with core
+
+    return ops.sqrt(x, **kw)
+
+
+def _kernel_rsqrt(x, **kw):
+    from repro.kernels.e2afs_sqrt import ops
+
+    return ops.rsqrt(x, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,11 +53,26 @@ class SqrtUnit:
     _sqrt: Callable
     _rsqrt: Optional[Callable] = None  # native rsqrt datapath if available
     description: str = ""
+    _kernel_sqrt: Optional[Callable] = None  # Pallas route via the dispatch layer
+    _kernel_rsqrt: Optional[Callable] = None
+    kernel_default: bool = False  # route through the kernel unless overridden
 
-    def sqrt(self, x: jax.Array, **kw) -> jax.Array:
+    def _use_kernel(self, kernel: Optional[bool]) -> bool:
+        use = self.kernel_default if kernel is None else kernel
+        if use and self._kernel_sqrt is None:
+            raise ValueError(f"unit {self.name!r} has no kernel route")
+        return use
+
+    def sqrt(self, x: jax.Array, *, kernel: Optional[bool] = None, **kw) -> jax.Array:
+        if self._use_kernel(kernel):
+            return self._kernel_sqrt(x, **kw)
         return self._sqrt(x, **kw)
 
-    def rsqrt(self, x: jax.Array, **kw) -> jax.Array:
+    def rsqrt(self, x: jax.Array, *, kernel: Optional[bool] = None, **kw) -> jax.Array:
+        if self._use_kernel(kernel):
+            if self._kernel_rsqrt is not None:
+                return self._kernel_rsqrt(x, **kw)
+            return 1.0 / self._kernel_sqrt(x, **kw)
         if self._rsqrt is not None:
             return self._rsqrt(x, **kw)
         return 1.0 / self._sqrt(x, **kw)
@@ -48,23 +85,43 @@ class SqrtUnit:
 _REGISTRY = {
     "exact": SqrtUnit("exact", exact.exact_sqrt, exact.exact_rsqrt, "IEEE sqrt (reference)"),
     "e2afs": SqrtUnit(
-        "e2afs", e2afs.e2afs_sqrt, e2afs.e2afs_rsqrt, "paper's dual-level shift-add datapath"
+        "e2afs",
+        make_differentiable_sqrt(e2afs.e2afs_sqrt),
+        make_differentiable_rsqrt(e2afs.e2afs_rsqrt),
+        "paper's dual-level shift-add datapath",
+        _kernel_sqrt=_kernel_sqrt,
+        _kernel_rsqrt=_kernel_rsqrt,
     ),
-    "esas": SqrtUnit("esas", esas.esas_sqrt, None, "reconstructed ESAS (level-1 series)"),
+    "esas": SqrtUnit(
+        "esas",
+        make_differentiable_sqrt(esas.esas_sqrt),
+        None,
+        "reconstructed ESAS (level-1 series)",
+    ),
     "cwaha4": SqrtUnit(
-        "cwaha4", partial(cwaha.cwaha_sqrt, k=4), None, "reconstructed CWAHA, 4 clusters"
+        "cwaha4",
+        make_differentiable_sqrt(partial(cwaha.cwaha_sqrt, k=4)),
+        None,
+        "reconstructed CWAHA, 4 clusters",
     ),
     "cwaha8": SqrtUnit(
-        "cwaha8", partial(cwaha.cwaha_sqrt, k=8), None, "reconstructed CWAHA, 8 clusters"
+        "cwaha8",
+        make_differentiable_sqrt(partial(cwaha.cwaha_sqrt, k=8)),
+        None,
+        "reconstructed CWAHA, 8 clusters",
     ),
 }
 
 
-def get_unit(name: str) -> SqrtUnit:
+def get_unit(name: str, *, kernel: bool = False) -> SqrtUnit:
     try:
-        return _REGISTRY[name]
+        unit = _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown sqrt unit {name!r}; available: {sorted(_REGISTRY)}") from None
+    if kernel:
+        unit._use_kernel(True)  # validate the route exists
+        unit = dataclasses.replace(unit, kernel_default=True)
+    return unit
 
 
 def available_units():

@@ -12,7 +12,6 @@ e.g. ("embed", "heads", None) -> P(("pod","data"), "model", None).
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 from jax.sharding import Mesh, NamedSharding

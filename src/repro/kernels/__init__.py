@@ -1,3 +1,31 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom Pallas kernels + the unified dispatch layer.
+
+Kernel packages (<name>/{<name>.py, ops.py, ref.py}) register into
+``repro.kernels.dispatch``; use ``dispatch.dispatch(name, *args)`` or the
+per-kernel ops wrappers — both resolve backend (compiled / interpret /
+reference) and tiling in one place.
+"""
+from repro.kernels import dispatch, tuning
+from repro.kernels.dispatch import (
+    KNOWN,
+    KernelSpec,
+    TilingSpec,
+    get,
+    register,
+    registered,
+    resolve_backend,
+    set_backend,
+)
+
+__all__ = [
+    "KNOWN",
+    "KernelSpec",
+    "TilingSpec",
+    "dispatch",
+    "get",
+    "register",
+    "registered",
+    "resolve_backend",
+    "set_backend",
+    "tuning",
+]

@@ -3,7 +3,12 @@
 One pass over (p, g, m, v): reads 4 streams, writes 3, with the
 second-moment sqrt done by the paper's integer datapath in-register — the
 optimizer's HBM traffic is the roofline floor (7 streams), and the sqrt adds
-zero transcendental work.  Tiles (block_rows, 128)."""
+zero transcendental work.  Tiles (block_rows, 128).
+
+Schedule-dependent scalars (lr and the bias-correction terms) arrive as a
+(3,) SMEM operand rather than compile-time constants, so the kernel can sit
+inside a jitted train step where they are traced values.
+"""
 from __future__ import annotations
 
 import functools
@@ -11,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import numerics
 from repro.core.e2afs import _e2afs_mantissa_exponent
@@ -28,7 +34,10 @@ def _sqrt_f32(x):
     return jnp.where(x <= 0.0, jnp.zeros_like(res), res)
 
 
-def _kernel(p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, lr, b1, b2, eps, wd, b1c, b2c):
+def _kernel(sched_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, b1, b2, eps, wd):
+    lr = sched_ref[0]
+    b1c = sched_ref[1]
+    b2c = sched_ref[2]
     g32 = g_ref[...].astype(jnp.float32)
     m = b1 * m_ref[...] + (1 - b1) * g32
     v = b2 * v_ref[...] + (1 - b2) * g32 * g32
@@ -43,16 +52,21 @@ def _kernel(p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, lr, b1, b2, e
 
 
 def adam_kernel_call(
-    p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, b1c=1.0, b2c=1.0,
+    p, g, m, v, sched, *, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
     block_rows=256, interpret=True,
 ):
+    """sched: (3,) float32 = [lr, b1c, b2c] (runtime scalars, SMEM)."""
     rows, cols = p.shape
     assert cols % LANE == 0 and rows % block_rows == 0
+    assert sched.shape == (3,)
     spec = pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_kernel, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c),
+        functools.partial(_kernel, b1=b1, b2=b2, eps=eps, wd=wd),
         grid=(rows // block_rows,),
-        in_specs=[spec] * 4,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            spec, spec, spec, spec,
+        ],
         out_specs=[spec] * 3,
         out_shape=[
             jax.ShapeDtypeStruct(p.shape, p.dtype),
@@ -60,4 +74,4 @@ def adam_kernel_call(
             jax.ShapeDtypeStruct(v.shape, jnp.float32),
         ],
         interpret=interpret,
-    )(p, g, m, v)
+    )(sched, p, g, m, v)

@@ -1,4 +1,10 @@
-"""Jit'd wrapper: fused AdamW-E2AFS update for arbitrary-shaped params."""
+"""Public wrapper: fused AdamW-E2AFS update for arbitrary-shaped params.
+
+lr / b1c / b2c are runtime scalars (they change every step under a schedule
+and must stay traceable inside a jitted train step); b1/b2/eps/wd are true
+hyperparameters and stay static.  Backend/tiling come from the dispatch
+layer.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,34 +12,56 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.adam.adam import LANE, adam_kernel_call
+from repro.kernels.adam.ref import ref_adam_update
 
 __all__ = ["adam_update"]
 
+_WIDTH = LANE * 8
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("lr", "b1", "b2", "eps", "wd", "b1c", "b2c", "interpret"),
-)
-def adam_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
-                b1c=1.0, b2c=1.0, interpret=True):
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block", "interpret"))
+def _pallas(p, g, m, v, *, block, interpret, lr, b1c=1.0, b2c=1.0,
+            b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
     shape = p.shape
     n = p.size
-    width = LANE * 8
-    pad = (-n) % width
+    # clamp to the tensor's real row count: a (5,)-element bias must pad to
+    # one row, not block_rows * width elements (x7 kernel streams)
+    br = min(block[0], -(-n // _WIDTH))
 
     def prep(a, dtype):
-        f = a.reshape(-1).astype(dtype)
-        if pad:
-            f = jnp.concatenate([f, jnp.zeros((pad,), dtype)])
-        return f.reshape(-1, width)
+        return dispatch.as_blocked_2d(a.astype(dtype), width=_WIDTH, block_rows=br)
 
-    rows = (n + pad) // width
-    block = 256 if rows % 256 == 0 else (8 if rows % 8 == 0 else 1)
+    sched = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        jnp.asarray(b1c, jnp.float32),
+        jnp.asarray(b2c, jnp.float32),
+    ])
     po, mo, vo = adam_kernel_call(
         prep(p, p.dtype), prep(g, g.dtype), prep(m, jnp.float32), prep(v, jnp.float32),
-        lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c,
-        block_rows=block, interpret=interpret,
+        sched, b1=b1, b2=b2, eps=eps, wd=wd,
+        block_rows=br, interpret=interpret,
     )
-    unflat = lambda a, dt: a.reshape(-1)[:n].reshape(shape).astype(dt)
+    unflat = lambda a, dt: dispatch.unblock(a, n, shape).astype(dt)
     return unflat(po, p.dtype), unflat(mo, jnp.float32), unflat(vo, jnp.float32)
+
+
+dispatch.register(
+    dispatch.KernelSpec(
+        name="adam",
+        reference=ref_adam_update,
+        pallas=_pallas,
+        tiling=dispatch.TilingSpec(
+            default=(256,), candidates=((8,), (64,), (256,), (512,))
+        ),
+    )
+)
+
+
+def adam_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
+                b1c=1.0, b2c=1.0, interpret: bool | None = None):
+    return dispatch.dispatch(
+        "adam", p, g, m, v,
+        lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c, interpret=interpret,
+    )

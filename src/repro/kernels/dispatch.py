@@ -1,0 +1,248 @@
+"""Unified kernel dispatch: one registry for every Pallas kernel in the repo.
+
+Each kernel package registers a :class:`KernelSpec` with (a) a pure-jnp
+reference path, (b) the Pallas path, and (c) a :class:`TilingSpec` of
+candidate block sizes.  :func:`dispatch` is the single entry point that
+resolves, per call:
+
+* backend — ``compiled`` / ``interpret`` / ``reference``, from the
+  ``REPRO_KERNEL_BACKEND`` env var or :func:`set_backend`; ``auto`` (the
+  default) picks interpret on CPU and compiled on TPU/GPU, so nothing
+  hardcodes ``interpret=True`` anymore;
+* tiling — cached or autotuned block sizes via :mod:`repro.kernels.tuning`;
+* plumbing — the flatten → pad-to-block → kernel → unpad steps shared by the
+  elementwise kernels live here (:func:`as_blocked_2d` / :func:`unblock` /
+  :func:`pad_rows`), not copy-pasted per op.
+
+The module also owns the ``jax.custom_jvp`` factories that make the
+approximate sqrt/rsqrt datapaths differentiable (the raw bit-level paths
+silently produce zero gradients), so the units are trainable end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import tuning
+
+__all__ = [
+    "KNOWN",
+    "KernelSpec",
+    "TilingSpec",
+    "as_blocked_2d",
+    "dispatch",
+    "get",
+    "make_differentiable_rsqrt",
+    "make_differentiable_sqrt",
+    "pad_rows",
+    "register",
+    "registered",
+    "resolve_backend",
+    "set_backend",
+    "unblock",
+]
+
+ENV_BACKEND = "REPRO_KERNEL_BACKEND"
+BACKENDS = ("auto", "compiled", "interpret", "reference")
+
+# Kernels known to the repo; get() lazily imports the ops module that
+# registers each one, so importing dispatch never drags in Pallas code.
+KNOWN = ("adam", "e2afs_rsqrt", "e2afs_sqrt", "rmsnorm", "sobel")
+_OPS_MODULE = {
+    "adam": "repro.kernels.adam.ops",
+    "e2afs_rsqrt": "repro.kernels.e2afs_sqrt.ops",
+    "e2afs_sqrt": "repro.kernels.e2afs_sqrt.ops",
+    "rmsnorm": "repro.kernels.rmsnorm.ops",
+    "sobel": "repro.kernels.sobel.ops",
+}
+
+_backend_override: Optional[str] = None
+
+
+# ---------------------------------------------------------------------------
+# backend resolution
+# ---------------------------------------------------------------------------
+
+
+def set_backend(name: Optional[str]) -> Optional[str]:
+    """Process-wide backend override (beats the env var); None resets to env.
+
+    Returns the previous override so callers can restore it.
+    """
+    global _backend_override
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; expected one of {BACKENDS}")
+    prev, _backend_override = _backend_override, name
+    return prev
+
+
+def resolve_backend(interpret: Optional[bool] = None) -> str:
+    """Resolve to a concrete backend: 'compiled' | 'interpret' | 'reference'.
+
+    An explicit ``interpret=`` bool (per-call override) wins; then
+    :func:`set_backend`; then ``REPRO_KERNEL_BACKEND``; then auto, which maps
+    CPU to interpret (Mosaic kernels don't compile there) and everything else
+    to compiled.
+    """
+    if interpret is not None:
+        return "interpret" if interpret else "compiled"
+    req = _backend_override or os.environ.get(ENV_BACKEND, "auto")
+    if req not in BACKENDS:
+        raise ValueError(f"invalid {ENV_BACKEND}={req!r}; expected one of {BACKENDS}")
+    if req == "auto":
+        return "interpret" if jax.default_backend() == "cpu" else "compiled"
+    return req
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TilingSpec:
+    """Candidate block sizes for a kernel; each block is a tuple of ints."""
+
+    default: tuple
+    candidates: tuple
+
+    def __post_init__(self):
+        if tuple(self.default) not in tuple(tuple(c) for c in self.candidates):
+            raise ValueError(f"default {self.default} not among candidates {self.candidates}")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """A registered kernel: reference oracle + Pallas path + tiling."""
+
+    name: str
+    reference: Callable  # pure-jnp, same public signature as the op
+    pallas: Callable  # (*args, block=tuple, interpret=bool, **kw)
+    tiling: TilingSpec
+
+
+_REGISTRY: dict = {}
+
+
+def register(spec: KernelSpec) -> KernelSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    if name not in _REGISTRY:
+        mod = _OPS_MODULE.get(name)
+        if mod is not None:
+            importlib.import_module(mod)
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown kernel {name!r}; known: {sorted(set(KNOWN))}") from None
+
+
+def registered() -> tuple:
+    """All registered kernel names (forces registration of the known set)."""
+    for name in KNOWN:
+        get(name)
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# the dispatch entry point
+# ---------------------------------------------------------------------------
+
+
+def dispatch(
+    name: str,
+    *args,
+    interpret: Optional[bool] = None,
+    block: Optional[Sequence[int]] = None,
+    tune: Optional[bool] = None,
+    **kw,
+):
+    """Run kernel ``name`` on ``args`` with backend + tiling resolved here."""
+    spec = get(name)
+    backend = resolve_backend(interpret)
+    if backend == "reference":
+        return spec.reference(*args, **kw)
+    interp = backend == "interpret"
+    if block is None:
+        def run(b):
+            return spec.pallas(*args, block=b, interpret=interp, **kw)
+
+        block = tuning.choose_block(
+            name, spec.tiling.candidates, spec.tiling.default, run, args,
+            interpret=interp, tune=tune,
+        )
+    return spec.pallas(*args, block=tuple(block), interpret=interp, **kw)
+
+
+# ---------------------------------------------------------------------------
+# shared pad/unpad plumbing
+# ---------------------------------------------------------------------------
+
+
+def as_blocked_2d(x: jax.Array, *, width: int, block_rows: int, pad_value=0.0) -> jax.Array:
+    """Flatten to (rows, width) with rows % block_rows == 0, padding with
+    ``pad_value`` (zeros-safe by default; elementwise sqrt paths pad with 1s
+    so padded lanes never hit the rsqrt(0)=inf special)."""
+    n = x.size
+    chunk = width * block_rows
+    total = -(-max(n, 1) // chunk) * chunk
+    flat = x.reshape(-1)
+    if total != n:
+        flat = jnp.concatenate([flat, jnp.full((total - n,), pad_value, x.dtype)])
+    return flat.reshape(total // width, width)
+
+
+def unblock(y2d: jax.Array, n: int, shape: tuple) -> jax.Array:
+    """Inverse of :func:`as_blocked_2d`: drop padding, restore shape."""
+    return y2d.reshape(-1)[:n].reshape(shape)
+
+
+def pad_rows(x2d: jax.Array, block_rows: int, pad_value=0.0) -> jax.Array:
+    """Pad leading dim of (rows, d) to a multiple of block_rows."""
+    rows, d = x2d.shape
+    pad = (-rows) % block_rows
+    if pad:
+        x2d = jnp.concatenate([x2d, jnp.full((pad, d), pad_value, x2d.dtype)])
+    return x2d
+
+
+# ---------------------------------------------------------------------------
+# differentiability: custom_jvp factories for approximate sqrt / rsqrt
+# ---------------------------------------------------------------------------
+
+
+def make_differentiable_sqrt(fn: Callable) -> Callable:
+    """Wrap an approximate sqrt so grads flow: d/dx sqrt(x) = 1 / (2 sqrt(x)),
+    evaluated at the *approximate* forward value (straight-through on the
+    approximation error, exact in the limit)."""
+    f = jax.custom_jvp(lambda x: fn(x))
+
+    @f.defjvp
+    def _jvp(primals, tangents):
+        (x,), (t,) = primals, tangents
+        y = f(x)
+        return y, t * (0.5 / y).astype(y.dtype)
+
+    return f
+
+
+def make_differentiable_rsqrt(fn: Callable) -> Callable:
+    """Wrap an approximate rsqrt: d/dx x^{-1/2} = -y / (2x) at the
+    approximate forward value y."""
+    f = jax.custom_jvp(lambda x: fn(x))
+
+    @f.defjvp
+    def _jvp(primals, tangents):
+        (x,), (t,) = primals, tangents
+        y = f(x)
+        return y, t * (-0.5 * y / x).astype(y.dtype)
+
+    return f

@@ -1,26 +1,45 @@
-"""Jit'd wrapper: fused RMSNorm over (..., d) with E2AFS-R rsqrt."""
+"""Public wrapper: fused RMSNorm over (..., d) with E2AFS-R rsqrt.
+
+Backend/tiling resolution and the pad-to-block plumbing come from the
+dispatch layer.  Padding rows are zeros: a padded row's mean-square is 0, so
+it can never leak signal into real rows even if the block logic changes.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.kernels import dispatch
+from repro.kernels.rmsnorm.ref import ref_rmsnorm
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel_call
 
 __all__ = ["rmsnorm"]
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("eps", "block", "interpret"))
+def _pallas(x, scale, *, block, interpret, eps=1e-6):
     shape = x.shape
     d = shape[-1]
     rows = x.size // d
-    x2d = x.reshape(rows, d)
-    block = 8
-    pad = (-rows) % block
-    if pad:
-        import jax.numpy as jnp
-
-        x2d = jnp.concatenate([x2d, jnp.ones((pad, d), x.dtype)])
-    out = rmsnorm_kernel_call(x2d, scale, eps=eps, block_rows=block, interpret=interpret)
+    br = min(block[0], rows)  # don't pad a 1-row input out to a whole block
+    x2d = dispatch.pad_rows(x.reshape(rows, d), br, pad_value=0.0)
+    out = rmsnorm_kernel_call(x2d, scale, eps=eps, block_rows=br, interpret=interpret)
     return out[:rows].reshape(shape)
+
+
+dispatch.register(
+    dispatch.KernelSpec(
+        name="rmsnorm",
+        reference=ref_rmsnorm,
+        pallas=_pallas,
+        tiling=dispatch.TilingSpec(
+            default=(8,), candidates=((1,), (2,), (4,), (8,), (16,), (32,))
+        ),
+    )
+)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            interpret: bool | None = None) -> jax.Array:
+    return dispatch.dispatch("rmsnorm", x, scale, eps=eps, interpret=interpret)

@@ -1,4 +1,9 @@
-"""Jit'd wrapper: Sobel magnitude for arbitrary image sizes (pads to tile)."""
+"""Public wrapper: Sobel magnitude for arbitrary image sizes (pads to tile).
+
+The image is edge-padded so any candidate tile divides the output; padding
+columns/rows are cropped after the kernel, so tile choice is purely a
+performance knob the dispatch layer is free to autotune.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,20 +11,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+from repro.kernels.sobel.ref import ref_sobel
 from repro.kernels.sobel.sobel import sobel_kernel_call
 
 __all__ = ["sobel_magnitude"]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def sobel_magnitude(img: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """img: (H, W) float32.  Returns (H-2, W-2) gradient magnitude."""
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _pallas(img, *, block, interpret):
+    bh, bw = block
     h, w = img.shape
     oh, ow = h - 2, w - 2
-    bh = 64 if oh % 64 == 0 else (2 if oh % 2 == 0 else 1)
-    bw = 128 if ow % 128 == 0 else (2 if ow % 2 == 0 else 1)
     ph = (-oh) % bh
     pw = (-ow) % bw
     padded = jnp.pad(img.astype(jnp.float32), ((0, ph), (0, pw)), mode="edge")
     out = sobel_kernel_call(padded, bh=bh, bw=bw, interpret=interpret)
     return out[:oh, :ow]
+
+
+dispatch.register(
+    dispatch.KernelSpec(
+        name="sobel",
+        reference=ref_sobel,
+        pallas=_pallas,
+        tiling=dispatch.TilingSpec(
+            default=(64, 128),
+            candidates=((8, 128), (32, 128), (64, 128), (64, 256), (128, 128)),
+        ),
+    )
+)
+
+
+def sobel_magnitude(img: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """img: (H, W) float32.  Returns (H-2, W-2) gradient magnitude."""
+    return dispatch.dispatch("sobel", img, interpret=interpret)

@@ -1,0 +1,156 @@
+"""Block-size autotuning for the kernel dispatch layer.
+
+A tiling choice is resolved in three steps (DESIGN.md "Autotune cache"):
+
+1. cache hit — the JSON cache maps a problem key
+   ``<kernel>/<backend>/<dtype>/n2^<bucket>`` to a previously-picked block;
+2. timed sweep — when autotuning is enabled (``REPRO_AUTOTUNE=1`` or an
+   explicit ``tune=True``), every candidate in the kernel's TilingSpec is
+   timed on the real inputs and the winner is persisted to the cache;
+3. default — otherwise the TilingSpec's default block is used.
+
+The cache lives at ``~/.cache/repro/kernel_tune.json`` unless
+``REPRO_TUNE_CACHE`` points elsewhere.  Sweeps never run under tracing
+(arguments are abstract, so there is nothing to time).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+from typing import Callable, Optional, Sequence
+
+import jax
+
+__all__ = [
+    "autotune_enabled",
+    "cache_path",
+    "choose_block",
+    "problem_key",
+    "sweep",
+]
+
+ENV_CACHE = "REPRO_TUNE_CACHE"
+ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+DEFAULT_CACHE = "~/.cache/repro/kernel_tune.json"
+CACHE_VERSION = 1
+
+# in-memory mirror of the on-disk cache, keyed by resolved path so tests can
+# repoint REPRO_TUNE_CACHE without stale state leaking across cache files
+_mem: dict = {}
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get(ENV_CACHE, DEFAULT_CACHE)).expanduser()
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(ENV_AUTOTUNE, "0").lower() not in ("0", "", "false", "off")
+
+
+def _entries(path: Path) -> dict:
+    key = str(path)
+    if key not in _mem:
+        try:
+            _mem[key] = json.loads(path.read_text()).get("entries", {})
+        except (FileNotFoundError, json.JSONDecodeError, OSError):
+            _mem[key] = {}
+    return _mem[key]
+
+
+def _persist(path: Path, entries: dict) -> None:
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(
+            json.dumps({"version": CACHE_VERSION, "entries": entries}, indent=2, sort_keys=True)
+        )
+    except OSError:
+        pass  # read-only FS: keep the in-memory pick, skip persistence
+
+
+def problem_key(name: str, args: Sequence, interpret: bool) -> str:
+    """Cache key: kernel, backend, dtype, and a power-of-two size bucket."""
+    arr = next(a for a in args if hasattr(a, "dtype") and hasattr(a, "size"))
+    bucket = max(int(arr.size) - 1, 0).bit_length()  # ceil(log2(n))
+    backend = "interpret" if interpret else "compiled"
+    return f"{name}/{backend}/{arr.dtype}/n2^{bucket}"
+
+
+def lookup(key: str, candidates: Sequence[tuple]) -> Optional[tuple]:
+    entry = _entries(cache_path()).get(key)
+    if entry is None:
+        return None
+    block = tuple(entry.get("block", ()))
+    return block if block in tuple(candidates) else None
+
+
+def record(key: str, block: tuple, timings_us: dict) -> None:
+    path = cache_path()
+    entries = _entries(path)
+    entries[key] = {"block": list(block), "timings_us": timings_us}
+    _persist(path, entries)
+
+
+def sweep(run: Callable[[tuple], object], candidates: Sequence[tuple], reps: int = 3):
+    """Time ``run(block)`` for each candidate; returns (best_block, timings_us)."""
+    results = []
+    timings = {}
+    for cand in candidates:
+        cand = tuple(cand)
+        try:
+            jax.block_until_ready(run(cand))  # warmup / compile
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(reps):
+                out = run(cand)
+            jax.block_until_ready(out)
+        except Exception:
+            continue  # candidate infeasible for this problem shape
+        us = (time.perf_counter() - t0) / reps * 1e6
+        results.append((cand, us))
+        timings[str(list(cand))] = us
+    if not results:
+        return None, timings
+    return min(results, key=lambda r: r[1])[0], timings
+
+
+def _is_tracer(a) -> bool:
+    try:
+        return isinstance(a, jax.core.Tracer)
+    except AttributeError:
+        pass
+    # jax versions without jax.core.Tracer: fail closed — treat any array-like
+    # without concrete addressable shards as traced, so a sweep never times
+    # (and persists a bogus winner from) abstract values inside a jit trace
+    if hasattr(a, "dtype") and hasattr(a, "shape"):
+        return not hasattr(a, "addressable_shards")
+    return False
+
+
+def choose_block(
+    name: str,
+    candidates: Sequence[tuple],
+    default: tuple,
+    run: Callable[[tuple], object],
+    args: Sequence,
+    *,
+    interpret: bool,
+    tune: Optional[bool] = None,
+) -> tuple:
+    """Resolve a block size: cache hit > (optional) timed sweep > default."""
+    if any(_is_tracer(a) for a in args):
+        return tuple(default)  # under tracing: nothing to time, shapes are abstract
+    key = problem_key(name, args, interpret)
+    hit = lookup(key, candidates)
+    if hit is not None:
+        return hit
+    if tune is None:
+        tune = autotune_enabled()
+    if not tune:
+        return tuple(default)
+    best, timings = sweep(run, candidates)
+    if best is None:
+        return tuple(default)
+    record(key, best, timings)
+    return best

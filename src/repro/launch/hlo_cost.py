@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 __all__ = ["analyze_hlo", "HloCost"]
 
@@ -113,8 +113,12 @@ _OPERAND_RE = re.compile(r"%?([\w\.\-]+)")
 
 
 def _parse_operands(rest: str) -> List[str]:
-    """Operand names from the call-paren contents (up to the matching ')')."""
+    """Operand names from the call-paren contents (up to the matching ')').
+
+    Inline operand types ("f32[64,256]{1,0} %Arg_1.2") carry commas inside
+    brackets/braces, so splitting tracks those depths too."""
     depth = 1
+    bracket = 0
     out = []
     cur = ""
     for ch in rest:
@@ -125,14 +129,22 @@ def _parse_operands(rest: str) -> List[str]:
             if depth == 0:
                 out.append(cur)
                 break
-        elif ch == "," and depth == 1:
+        elif ch in "[{":
+            bracket += 1
+        elif ch in "]}":
+            bracket -= 1
+        elif ch == "," and depth == 1 and bracket == 0:
             out.append(cur)
             cur = ""
             continue
         cur += ch
     names = []
     for frag in out:
-        m = _OPERAND_RE.search(frag.strip())
+        frag = frag.strip()
+        # some HLO dumps print operands with inline types ("f32[64,256]{1,0}
+        # %Arg_1.2") — the %-prefixed token is the name; bare-name dumps fall
+        # back to the first identifier
+        m = re.search(r"%([\w\.\-]+)", frag) or _OPERAND_RE.search(frag)
         if m:
             names.append(m.group(1))
     return names

@@ -6,7 +6,6 @@ path serves the real trainer, the smoke tests, and the 512-device dry-run.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint as ckpt_lib
 from repro.configs import get_config, get_smoke_config

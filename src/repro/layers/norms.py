@@ -21,7 +21,16 @@ def rmsnorm_init(ini: DenseInit, name: str, d: int):
     ini.add(name, (d,), ("embed",), init=zeros)
 
 
-def rmsnorm(scale, x, *, sqrt_unit: str = "exact", eps: float = 1e-6):
+def rmsnorm(scale, x, *, sqrt_unit: str = "exact", eps: float = 1e-6, fused: bool = False):
+    """``fused=True`` routes the whole norm through the Pallas RMSNorm kernel
+    (one HBM read/write, rsqrt in-register) via the kernel dispatch layer;
+    only the "e2afs" unit has a fused datapath."""
+    if fused:
+        if sqrt_unit != "e2afs":
+            raise ValueError(f"fused rmsnorm requires sqrt_unit='e2afs', got {sqrt_unit!r}")
+        from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_kernel
+
+        return rmsnorm_kernel(x, scale.astype(jnp.float32), eps=eps)
     unit = get_unit(sqrt_unit)
     dt = x.dtype
     xf = x.astype(jnp.float32)

@@ -30,6 +30,9 @@ class AdamWConfig:
     warmup_steps: int = 100
     total_steps: int = 10_000
     sqrt_unit: str = "exact"
+    # route the whole m/v/p update through the fused Pallas AdamW kernel
+    # (dispatch layer resolves backend + tiling); requires sqrt_unit="e2afs".
+    fused: bool = False
 
 
 def adamw_init(params):
@@ -80,7 +83,7 @@ def adamw_update(cfg: AdamWConfig, grads, state, params):
     b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
     b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
 
-    def upd(g, m, v, p):
+    def upd_jnp(g, m, v, p):
         g32 = g.astype(jnp.float32)
         m = cfg.b1 * m + (1 - cfg.b1) * g32
         v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
@@ -90,6 +93,19 @@ def adamw_update(cfg: AdamWConfig, grads, state, params):
         p32 = p.astype(jnp.float32)
         new_p = p32 - lr * (m_hat / denom + cfg.weight_decay * p32)
         return new_p.astype(p.dtype), m, v
+
+    if cfg.fused:
+        if cfg.sqrt_unit != "e2afs":
+            raise ValueError(f"fused AdamW requires sqrt_unit='e2afs', got {cfg.sqrt_unit!r}")
+        from repro.kernels.adam.ops import adam_update as fused_adam_update
+
+        def upd(g, m, v, p):
+            return fused_adam_update(
+                p, g, m, v, lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
+                wd=cfg.weight_decay, b1c=b1c, b2c=b2c,
+            )
+    else:
+        upd = upd_jnp
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_m = treedef.flatten_up_to(state["m"])

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import e2afs_sqrt
-from repro.core.numerics import FP16
 
 
 def _fp16_from_bits(b):

@@ -1,9 +1,14 @@
 """Hypothesis property tests for the approximate sqrt units."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="install .[test] extras for property tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import available_units, get_unit
+
+pytestmark = pytest.mark.slow
 
 FP16_MIN_NORMAL = float(np.float16(6.104e-05))  # 2^-14
 finite_pos_f16 = st.floats(

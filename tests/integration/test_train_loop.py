@@ -3,7 +3,6 @@
 import json
 
 import numpy as np
-import pytest
 
 from repro.launch.train import train_loop
 
@@ -49,8 +48,6 @@ def test_straggler_event_checkpoints(tmp_path):
     train_loop("qwen3-4b", smoke=True, steps=8, seq=32, batch=2,
                ckpt_dir=str(d), ckpt_every=100, log_every=1000,
                inject_straggler_at=3)
-    from repro.checkpoint import latest_step
-
     # straggler at step 3 forced checkpoint step-4 (plus the final step-8)
     steps = {int(p.name.split("-")[1]) for p in d.iterdir() if p.name.startswith("step-")}
     assert 4 in steps and 8 in steps

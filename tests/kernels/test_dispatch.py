@@ -1,0 +1,261 @@
+"""The unified kernel dispatch layer: registry completeness, backend
+resolution, Pallas-vs-reference agreement per dtype, custom_jvp gradients,
+and the autotune cache.  Small shapes — this is the CI fast lane's kernel
+coverage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, tuning
+from repro.kernels.e2afs_sqrt import ops as sqrt_ops
+
+ADAM_KW = dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, b1c=0.5, b2c=0.25)
+
+
+def _inputs(name, dtype=jnp.float32):
+    k = jax.random.key(0)
+    if name in ("e2afs_sqrt", "e2afs_rsqrt"):
+        x = jnp.abs(jax.random.normal(k, (3, 37), jnp.float32)) + 0.1
+        return (x.astype(dtype),), {}
+    if name == "rmsnorm":
+        x = jax.random.normal(k, (5, 256), jnp.float32).astype(dtype)
+        return (x, jax.random.normal(jax.random.key(1), (256,)) * 0.1), {}
+    if name == "sobel":
+        return (jax.random.uniform(k, (34, 66), jnp.float32) * 255,), {}
+    if name == "adam":
+        ks = jax.random.split(k, 4)
+        p, g = (jax.random.normal(kk, (9, 17), jnp.float32) for kk in ks[:2])
+        m = jax.random.normal(ks[2], (9, 17), jnp.float32) * 0.1
+        v = jnp.abs(jax.random.normal(ks[3], (9, 17), jnp.float32)) * 0.01
+        return (p, g, m, v), dict(ADAM_KW)
+    raise ValueError(name)
+
+
+@pytest.fixture
+def reference_backend():
+    prev = dispatch.set_backend("reference")
+    yield
+    dispatch.set_backend(prev)
+
+
+class TestRegistry:
+    def test_all_known_kernels_register(self):
+        assert dispatch.registered() == tuple(sorted(set(dispatch.KNOWN)))
+
+    def test_specs_are_complete(self):
+        for name in dispatch.KNOWN:
+            spec = dispatch.get(name)
+            assert callable(spec.reference) and callable(spec.pallas)
+            assert tuple(spec.tiling.default) in tuple(spec.tiling.candidates)
+
+    def test_unknown_kernel_raises(self):
+        with pytest.raises(ValueError, match="unknown kernel"):
+            dispatch.get("fft")
+
+    def test_default_outside_candidates_rejected(self):
+        with pytest.raises(ValueError, match="not among candidates"):
+            dispatch.TilingSpec(default=(7,), candidates=((8,),))
+
+
+class TestBackendResolution:
+    def test_explicit_interpret_wins(self):
+        assert dispatch.resolve_backend(interpret=True) == "interpret"
+        assert dispatch.resolve_backend(interpret=False) == "compiled"
+
+    def test_auto_maps_cpu_to_interpret(self):
+        if jax.default_backend() == "cpu":
+            assert dispatch.resolve_backend() == "interpret"
+        else:
+            assert dispatch.resolve_backend() == "compiled"
+
+    def test_env_override(self, monkeypatch):
+        monkeypatch.setenv(dispatch.ENV_BACKEND, "reference")
+        assert dispatch.resolve_backend() == "reference"
+        monkeypatch.setenv(dispatch.ENV_BACKEND, "bogus")
+        with pytest.raises(ValueError, match="REPRO_KERNEL_BACKEND"):
+            dispatch.resolve_backend()
+
+    def test_set_backend_beats_env(self, monkeypatch):
+        monkeypatch.setenv(dispatch.ENV_BACKEND, "interpret")
+        prev = dispatch.set_backend("reference")
+        try:
+            assert dispatch.resolve_backend() == "reference"
+        finally:
+            dispatch.set_backend(prev)
+
+    def test_set_backend_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            dispatch.set_backend("cuda")
+
+
+class TestPallasMatchesReference:
+    """Resolved-backend (compiled on accelerators, interpret on CPU) vs the
+    pure-jnp reference path, per dtype."""
+
+    @pytest.mark.parametrize("name", ["e2afs_sqrt", "e2afs_rsqrt"])
+    @pytest.mark.parametrize("dtype", [jnp.float16, jnp.bfloat16, jnp.float32])
+    def test_elementwise_bit_exact(self, name, dtype, reference_backend):
+        args, kw = _inputs(name, dtype)
+        ref = dispatch.dispatch(name, *args, **kw)
+        dispatch.set_backend(None)  # resolved backend (auto)
+        out = dispatch.dispatch(name, *args, **kw)
+        assert out.dtype == ref.dtype
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @pytest.mark.parametrize("name,rtol", [("rmsnorm", 2e-2), ("sobel", 1e-4), ("adam", 1e-6)])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_fused_allclose(self, name, rtol, dtype, reference_backend):
+        if name in ("sobel", "adam") and dtype != jnp.float32:
+            pytest.skip("f32-only kernel")
+        args, kw = _inputs(name, dtype)
+        ref = dispatch.dispatch(name, *args, **kw)
+        dispatch.set_backend(None)
+        out = dispatch.dispatch(name, *args, **kw)
+        for o, r in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+            np.testing.assert_allclose(
+                np.asarray(o, np.float32), np.asarray(r, np.float32), rtol=rtol, atol=rtol
+            )
+
+    @pytest.mark.parametrize("block", [(64,), (128,)])
+    def test_explicit_block_override(self, block):
+        args, _ = _inputs("e2afs_sqrt")
+        out = dispatch.dispatch("e2afs_sqrt", *args, block=block)
+        ref = dispatch.get("e2afs_sqrt").reference(*args)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_dispatch_under_jit(self):
+        args, _ = _inputs("e2afs_sqrt")
+        f = jax.jit(lambda x: dispatch.dispatch("e2afs_sqrt", x))
+        np.testing.assert_array_equal(
+            np.asarray(f(*args)), np.asarray(sqrt_ops.sqrt(*args))
+        )
+
+
+class TestGradients:
+    """custom_jvp rules: the approximate units are differentiable, with
+    tangents matching the exact derivatives to within the forward error."""
+
+    def test_sqrt_grad_close_to_exact(self):
+        x = jnp.linspace(0.3, 40.0, 64, dtype=jnp.float32)
+        g = jax.grad(lambda x: sqrt_ops.sqrt(x).sum())(x)
+        ge = jax.grad(lambda x: jnp.sqrt(x).sum())(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(ge), rtol=0.08)
+        assert bool(jnp.all(g != 0.0))
+
+    def test_rsqrt_grad_close_to_lax_rsqrt(self):
+        x = jnp.linspace(0.3, 40.0, 64, dtype=jnp.float32)
+        g = jax.grad(lambda x: sqrt_ops.rsqrt(x).sum())(x)
+        ge = jax.grad(lambda x: jax.lax.rsqrt(x).sum())(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(ge), rtol=0.10)
+        assert bool(jnp.all(g != 0.0))
+
+    @pytest.mark.parametrize("unit_name", ["e2afs", "esas", "cwaha8"])
+    def test_units_are_trainable(self, unit_name):
+        """The registry units (pure-jnp datapaths) carry nonzero grads — the
+        raw bit-level paths used to silently return zero."""
+        from repro.core import get_unit
+
+        unit = get_unit(unit_name)
+        x = jnp.asarray([0.5, 2.0, 9.0], jnp.float32)
+        g = jax.grad(lambda x: unit.sqrt(x).sum())(x)
+        assert bool(jnp.all(g != 0.0)), g
+
+    def test_rmsnorm_layer_grads_flow_through_e2afs(self):
+        from repro.layers import norms
+
+        scale = jnp.zeros((64,))
+        x = jax.random.normal(jax.random.key(0), (4, 64), jnp.float32)
+        g = jax.grad(lambda s: norms.rmsnorm(s, x, sqrt_unit="e2afs").sum())(scale)
+        assert bool(jnp.any(g != 0.0))
+
+
+class TestIntegrationRoutes:
+    def test_unit_kernel_route_matches_ops(self):
+        from repro.core import get_unit
+
+        x = jnp.abs(jax.random.normal(jax.random.key(0), (130,), jnp.float32)) + 0.1
+        unit = get_unit("e2afs", kernel=True)
+        np.testing.assert_array_equal(np.asarray(unit.sqrt(x)), np.asarray(sqrt_ops.sqrt(x)))
+        np.testing.assert_array_equal(np.asarray(unit.rsqrt(x)), np.asarray(sqrt_ops.rsqrt(x)))
+        # per-call override on a default unit
+        unit = get_unit("e2afs")
+        np.testing.assert_array_equal(
+            np.asarray(unit.rsqrt(x, kernel=True)), np.asarray(sqrt_ops.rsqrt(x))
+        )
+
+    def test_unit_without_kernel_route_raises(self):
+        from repro.core import get_unit
+
+        with pytest.raises(ValueError, match="no kernel route"):
+            get_unit("esas", kernel=True)
+
+    def test_fused_rmsnorm_matches_unfused(self):
+        from repro.layers import norms
+
+        scale = jax.random.normal(jax.random.key(1), (128,)) * 0.1
+        x = jax.random.normal(jax.random.key(2), (2, 3, 128), jnp.float32)
+        a = norms.rmsnorm(scale, x, sqrt_unit="e2afs")
+        b = norms.rmsnorm(scale, x, sqrt_unit="e2afs", fused=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2)
+
+    def test_fused_adamw_matches_unfused_under_jit(self):
+        from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+        p = {"w": jax.random.normal(jax.random.key(3), (33, 17)), "b": jnp.ones((5,))}
+        g = jax.tree.map(lambda a: 0.1 * jnp.ones_like(a), p)
+        st = adamw_init(p)
+        cfg_u = AdamWConfig(sqrt_unit="e2afs", clip_norm=None)
+        cfg_f = AdamWConfig(sqrt_unit="e2afs", clip_norm=None, fused=True)
+        pu, _, _ = adamw_update(cfg_u, g, jax.tree.map(jnp.copy, st), p)
+        pf, _, _ = jax.jit(lambda g, s, p: adamw_update(cfg_f, g, s, p))(
+            g, jax.tree.map(jnp.copy, st), p
+        )
+        for a, b in zip(jax.tree.leaves(pu), jax.tree.leaves(pf)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+class TestAutotune:
+    def test_sweep_persists_and_cache_hits(self, tmp_path, monkeypatch):
+        cache = tmp_path / "tune.json"
+        monkeypatch.setenv(tuning.ENV_CACHE, str(cache))
+        args, _ = _inputs("e2afs_sqrt")
+        out = dispatch.dispatch("e2afs_sqrt", *args, tune=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(dispatch.get("e2afs_sqrt").reference(*args))
+        )
+        assert cache.exists()
+        import json
+
+        data = json.loads(cache.read_text())
+        assert data["version"] == tuning.CACHE_VERSION
+        (key, entry), = data["entries"].items()
+        assert key.startswith("e2afs_sqrt/")
+        assert tuple(entry["block"]) in dispatch.get("e2afs_sqrt").tiling.candidates
+        assert entry["timings_us"]
+
+        # second call must be a pure cache hit: no sweep
+        def boom(*a, **k):
+            raise AssertionError("sweep ran on a cache hit")
+
+        monkeypatch.setattr(tuning, "sweep", boom)
+        dispatch.dispatch("e2afs_sqrt", *args, tune=True)
+
+    def test_no_tuning_under_tracing(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(tuning.ENV_CACHE, str(tmp_path / "t.json"))
+        monkeypatch.setenv(tuning.ENV_AUTOTUNE, "1")
+        args, _ = _inputs("e2afs_sqrt")
+        jax.jit(lambda x: dispatch.dispatch("e2afs_sqrt", x))(*args)  # must not crash
+        assert not (tmp_path / "t.json").exists()
+
+    def test_default_block_when_tuning_off(self, tmp_path, monkeypatch):
+        monkeypatch.setenv(tuning.ENV_CACHE, str(tmp_path / "t.json"))
+        monkeypatch.delenv(tuning.ENV_AUTOTUNE, raising=False)
+        spec = dispatch.get("rmsnorm")
+        args, kw = _inputs("rmsnorm")
+        block = tuning.choose_block(
+            "rmsnorm", spec.tiling.candidates, spec.tiling.default,
+            lambda b: spec.pallas(*args, block=b, interpret=True, **kw),
+            args, interpret=True,
+        )
+        assert block == tuple(spec.tiling.default)

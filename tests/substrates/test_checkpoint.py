@@ -1,6 +1,4 @@
 """Checkpoint: atomic roundtrip, latest-step discovery, async, resharding."""
-import json
-import threading
 
 import jax
 import jax.numpy as jnp

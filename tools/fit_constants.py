@@ -9,7 +9,6 @@ Paste the printed literals into src/repro/core/e2afs.py / cwaha.py.
 """
 from __future__ import annotations
 
-import itertools
 
 import numpy as np
 
