@@ -1,0 +1,77 @@
+"""K-means quantization: fused kernel vs naive broadcast path.
+
+Times one Lloyd iteration (assignment + centroid statistics + update) both
+ways on the resolved backend (CPU = interpret mode: correctness-side
+timings only) and records an analytic peak-transient-memory estimate: the
+broadcast path materializes an (N, K, 3) difference tensor, an (N, K)
+distance matrix and an (N, K) one-hot in HBM, while the fused kernel's
+working set is one VMEM tile plus O(K) accumulators.  The kernel tile is
+resolved up front (cache / REPRO_AUTOTUNE sweep / default) and passed
+explicitly, so the recorded block is exactly the one being timed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import md_table, save, time_call
+from repro.apps.images import rgb_test_image
+from repro.apps.kmeans import resolve_fused_block, update_centroids
+from repro.kernels import dispatch
+from repro.kernels.kmeans.ref import ref_kmeans_assign
+
+N_IMG = 96  # 96x96 keeps interpret-mode runtime sane
+K = 20
+
+
+def _broadcast_iter(pix, cent):
+    _, sums, counts = ref_kmeans_assign(pix, cent)
+    return update_centroids(cent, sums, counts)
+
+
+def _fused_iter(pix, cent, block):
+    _, sums, counts = dispatch.dispatch("kmeans_assign", pix, cent, block=block)
+    return update_centroids(cent, sums, counts)
+
+
+def run():
+    backend = dispatch.resolve_backend()
+    rgb = rgb_test_image("peppers", n=N_IMG)
+    pix = jnp.asarray(rgb.reshape(-1, 3), jnp.float32)
+    n, c = pix.shape
+    cent = pix[:: n // K][:K]
+
+    spec = dispatch.get("kmeans_assign")
+    block = resolve_fused_block(pix, cent) or tuple(spec.tiling.default)
+    bn = min(block[0], n)
+
+    us_fused = time_call(jax.jit(functools.partial(_fused_iter, block=tuple(block))), pix, cent)
+    us_broadcast = time_call(jax.jit(_broadcast_iter), pix, cent)
+
+    # peak transient bytes per iteration (f32), beyond the pixel/centroid
+    # buffers: diff + distances + one-hot, at N scale (HBM) vs tile scale
+    # (VMEM), plus the fused path's sum/count accumulators
+    broadcast_bytes = (n * K * c + n * K + n * K) * 4
+    fused_bytes = (bn * K * c + bn * K + bn * K + 2 * K * (c + 1)) * 4
+
+    rows = [
+        ["fused[pallas-%s]" % backend, f"{us_fused:.0f}", f"{fused_bytes / 1024:.0f} KiB"],
+        ["broadcast[jnp]", f"{us_broadcast:.0f}", f"{broadcast_bytes / 1024:.0f} KiB"],
+    ]
+    print(f"\n== K-means iteration bench (N={n}, K={K}, backend={backend}; informational) ==")
+    print(md_table(["path", "us/iter", "peak transient"], rows))
+
+    payload = {
+        "backend": backend,
+        "n": n,
+        "k": K,
+        "block": list(block),
+        "fused_us_per_iter": us_fused,
+        "broadcast_us_per_iter": us_broadcast,
+        "fused_peak_transient_bytes": fused_bytes,
+        "broadcast_peak_transient_bytes": broadcast_bytes,
+    }
+    save("kmeans_bench", payload)
+    return payload

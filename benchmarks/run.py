@@ -16,6 +16,7 @@ SUITES = (
     "table4_sobel",     # paper Table 4, Sobel PSNR/SSIM
     "fig5_kmeans",      # paper Fig 5, K-means color quantization
     "kernels_bench",    # kernel microbench (informational)
+    "kmeans_bench",     # fused vs broadcast K-means iteration (informational)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 

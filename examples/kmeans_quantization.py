@@ -3,7 +3,8 @@
     PYTHONPATH=src python examples/kmeans_quantization.py
 """
 from repro.apps.images import rgb_test_image
-from repro.apps.kmeans import evaluate_units
+from repro.apps.kmeans import evaluate_units, kmeans_quantize
+from repro.apps.metrics_img import psnr
 
 
 def main():
@@ -13,6 +14,11 @@ def main():
         print(f"{u:8s} PSNR {r['psnr']:.2f} dB  SSIM {r['ssim']:.4f}")
     gap = abs(res["e2afs"]["psnr"] - res["cwaha8"]["psnr"])
     print(f"\n|e2afs - cwaha8| = {gap:.2f} dB (paper: 'closely aligned')")
+
+    # fused route: Lloyd iterations inside the kmeans_assign Pallas kernel
+    quant, _ = kmeans_quantize(rgb, k=20, sqrt_unit="e2afs", fused=True)
+    print(f"fused    PSNR {psnr(rgb.mean(-1), quant.mean(-1)):.2f} dB "
+          f"(no (N, K, 3) HBM intermediate)")
 
 
 if __name__ == "__main__":

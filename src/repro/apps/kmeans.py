@@ -4,45 +4,138 @@ Euclidean distances in Lloyd's algorithm run through the selected SqrtUnit
 (as in the paper's Python-modelled evaluation).  Because the approximate
 sqrt is only piecewise-monotone, nearest-centroid assignments CAN flip near
 decision boundaries — exactly the error-tolerance being demonstrated.
-Fidelity = PSNR/SSIM of the quantized image vs the original."""
+Fidelity = PSNR/SSIM of the quantized image vs the original.
+
+Two execution paths:
+
+* ``fused=False`` — the naive broadcast path (``ref_kmeans_assign``): every
+  Lloyd iteration materializes an (N, K, 3) difference tensor and an (N, K)
+  one-hot in HBM;
+* ``fused=True`` — iterations route through the ``kmeans_assign`` Pallas
+  kernel (``repro.kernels.kmeans``): distances, E2AFS sqrt, argmin and the
+  per-centroid sum/count accumulation all happen in VMEM tiles, under one
+  jitted ``lax.scan``.  The kernel tile is resolved eagerly (cache /
+  autotune sweep / default) on the concrete shapes and threaded through the
+  jit as a static argument.  Requires ``sqrt_unit="e2afs"`` (the in-kernel
+  datapath).
+
+``kmeans_quantize_batch`` vmaps either path over an image stack for
+throughput-style serving.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.metrics_img import psnr, ssim
-from repro.core import get_unit
+from repro.kernels import dispatch, tuning
+from repro.kernels.kmeans.ref import ref_kmeans_assign
 
-__all__ = ["kmeans_quantize", "evaluate_units"]
+__all__ = ["kmeans_quantize", "kmeans_quantize_batch", "update_centroids", "evaluate_units"]
+
+
+def _init_centroids(pix, key, k: int):
+    return pix[jax.random.choice(key, pix.shape[0], (k,), replace=False)]
+
+
+def update_centroids(cent, sums, counts):
+    """Lloyd centroid update; empty clusters keep their previous centroid."""
+    counts = counts[:, None]
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cent)
+
+
+def _lloyd_broadcast(pix, cent, *, iters: int, sqrt_unit: str):
+    """Naive path: (N, K, 3) distance tensor + (N, K) one-hot per iteration."""
+
+    def step(cent, _):
+        _, sums, counts = ref_kmeans_assign(pix, cent, sqrt_unit=sqrt_unit)
+        return update_centroids(cent, sums, counts), None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent, ref_kmeans_assign(pix, cent, sqrt_unit=sqrt_unit)[0]
+
+
+def resolve_fused_block(pix, cent):
+    """Resolve the kmeans_assign tile on concrete shapes, outside jit, so the
+    autotune cache (and REPRO_AUTOTUNE sweeps) reach the fused path — under
+    tracing the dispatch layer could only ever pick the default block."""
+    backend = dispatch.resolve_backend()
+    if backend == "reference":
+        return None
+    spec = dispatch.get("kmeans_assign")
+    return tuning.choose_block(
+        "kmeans_assign", spec.tiling.candidates, spec.tiling.default,
+        lambda b: dispatch.dispatch("kmeans_assign", pix, cent, block=b),
+        (pix, cent), interpret=backend == "interpret",
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block"))
+def _lloyd_fused(pix, cent, *, iters: int, block):
+    """Fused path: every iteration is one dispatch("kmeans_assign") call."""
+
+    def assign(cent):
+        return dispatch.dispatch("kmeans_assign", pix, cent, block=block)
+
+    def step(cent, _):
+        _, sums, counts = assign(cent)
+        return update_centroids(cent, sums, counts), None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent, assign(cent)[0]
+
+
+def _lloyd(pix, cent, *, iters: int, sqrt_unit: str, fused: bool, block=None):
+    if fused:
+        if sqrt_unit != "e2afs":
+            raise ValueError(
+                f"fused K-means requires sqrt_unit='e2afs', got {sqrt_unit!r}"
+            )
+        if block is None:
+            block = resolve_fused_block(pix, cent)
+        return _lloyd_fused(pix, cent, iters=iters, block=block)
+    return _lloyd_broadcast(pix, cent, iters=iters, sqrt_unit=sqrt_unit)
 
 
 def kmeans_quantize(
-    rgb: np.ndarray, *, k: int = 20, iters: int = 12, sqrt_unit: str = "e2afs", seed: int = 0
+    rgb: np.ndarray, *, k: int = 20, iters: int = 12, sqrt_unit: str = "e2afs",
+    seed: int = 0, fused: bool = False,
 ):
     """rgb: (H, W, 3) [0,255].  Returns (quantized image, centroids)."""
-    unit = get_unit(sqrt_unit)
     h, w, _ = rgb.shape
-    pix = jnp.asarray(rgb.reshape(-1, 3), jnp.float32)
-    key = jax.random.key(seed)
-    cent = pix[jax.random.choice(key, pix.shape[0], (k,), replace=False)]
-
-    def dist(px, c):
-        sq = jnp.sum((px[:, None, :] - c[None, :, :]) ** 2, axis=-1)
-        return unit.sqrt(jnp.maximum(sq, 1e-9))  # through the approx unit
-
-    def step(cent, _):
-        d = dist(pix, cent)
-        assign = jnp.argmin(d, axis=1)
-        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
-        counts = onehot.sum(0)
-        sums = onehot.T @ pix
-        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1), cent)
-        return new, None
-
-    cent, _ = jax.lax.scan(step, cent, None, length=iters)
-    assign = jnp.argmin(dist(pix, cent), axis=1)
+    pix = jnp.asarray(np.asarray(rgb).reshape(-1, 3), jnp.float32)
+    cent = _init_centroids(pix, jax.random.key(seed), k)
+    cent, assign = _lloyd(pix, cent, iters=iters, sqrt_unit=sqrt_unit, fused=fused)
     quant = cent[assign].reshape(h, w, 3)
+    return np.asarray(quant, np.float64), np.asarray(cent)
+
+
+def kmeans_quantize_batch(
+    rgbs: np.ndarray, *, k: int = 20, iters: int = 12, sqrt_unit: str = "e2afs",
+    seed: int = 0, fused: bool = True,
+):
+    """rgbs: (B, H, W, 3) [0,255] image stack, quantized per-image under one
+    vmapped Lloyd solve.  Returns (quantized stack, centroids (B, k, 3)).
+
+    Unlike :func:`kmeans_quantize`, this serving-oriented entry point
+    defaults to the fused kernel path, which requires ``sqrt_unit="e2afs"``;
+    pass ``fused=False`` to batch any other unit over the broadcast path.
+    """
+    b, h, w, _ = rgbs.shape
+    pix = jnp.asarray(np.asarray(rgbs).reshape(b, -1, 3), jnp.float32)
+    keys = jax.random.split(jax.random.key(seed), b)
+    cent = jax.vmap(functools.partial(_init_centroids, k=k))(pix, keys)
+    # resolve the tile on one image's concrete shapes; inside vmap everything
+    # is a tracer and the autotuner could only fall back to the default
+    block = resolve_fused_block(pix[0], cent[0]) if fused and sqrt_unit == "e2afs" else None
+    solve = functools.partial(
+        _lloyd, iters=iters, sqrt_unit=sqrt_unit, fused=fused, block=block
+    )
+    cent, assign = jax.vmap(solve)(pix, cent)
+    quant = jax.vmap(lambda c, a: c[a])(cent, assign).reshape(b, h, w, 3)
     return np.asarray(quant, np.float64), np.asarray(cent)
 
 

@@ -17,7 +17,12 @@ __all__ = ["edge_map", "evaluate_units"]
 def edge_map(img: np.ndarray, sqrt_unit: str, *, use_kernel: bool = False) -> np.ndarray:
     """(H, W) [0,255] -> normalized edge map in [0,255]."""
     x = jnp.asarray(img, jnp.float32)
-    if use_kernel and sqrt_unit == "e2afs":
+    if use_kernel:
+        if sqrt_unit != "e2afs":
+            raise ValueError(
+                f"use_kernel=True requires sqrt_unit='e2afs' (the fused Sobel "
+                f"kernel embeds the E2AFS datapath), got {sqrt_unit!r}"
+            )
         from repro.kernels.sobel.ops import sobel_magnitude
 
         mag = sobel_magnitude(x)

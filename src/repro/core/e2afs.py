@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import numerics
 from repro.core.numerics import FloatFormat, format_of
 
-__all__ = ["e2afs_sqrt", "e2afs_rsqrt", "E2AFS_CONSTANTS"]
+__all__ = ["e2afs_sqrt", "e2afs_sqrt_positive", "e2afs_rsqrt", "E2AFS_CONSTANTS"]
 
 # Q-grid region constants, per paper eqs. (3)/(4).
 _C_EVEN_HI = 0.045  # subtracted when r even, Y >= 0.5
@@ -76,6 +76,20 @@ def _e2afs_mantissa_exponent(exp, man, fmt: FloatFormat):
 
     man_out = res - one
     return exp_out, man_out
+
+
+def e2afs_sqrt_positive(x: jax.Array) -> jax.Array:
+    """E2AFS sqrt for known-positive finite inputs — the in-kernel datapath.
+
+    Skips :func:`numerics.apply_specials` (no inf/NaN/subnormal handling):
+    the Pallas kernels clamp their operands positive before calling, and the
+    non-positive guard here only covers exact zeros from that clamp.
+    """
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp_out, man_out = _e2afs_mantissa_exponent(exp, man, fmt)
+    res = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
+    return jnp.where(x <= 0.0, jnp.zeros_like(res), res)
 
 
 def e2afs_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:

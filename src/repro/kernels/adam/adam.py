@@ -18,20 +18,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import numerics
-from repro.core.e2afs import _e2afs_mantissa_exponent
+from repro.core.e2afs import e2afs_sqrt_positive
 
 __all__ = ["adam_kernel_call"]
 
 LANE = 128
-
-
-def _sqrt_f32(x):
-    fmt = numerics.FP32
-    sign, exp, man = numerics.decompose(x, fmt)
-    exp_out, man_out = _e2afs_mantissa_exponent(exp, man, fmt)
-    res = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
-    return jnp.where(x <= 0.0, jnp.zeros_like(res), res)
 
 
 def _kernel(sched_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, b1, b2, eps, wd):
@@ -43,7 +34,7 @@ def _kernel(sched_ref, p_ref, g_ref, m_ref, v_ref, po_ref, mo_ref, vo_ref, *, b1
     v = b2 * v_ref[...] + (1 - b2) * g32 * g32
     m_hat = m / b1c
     v_hat = v / b2c
-    denom = _sqrt_f32(v_hat) + eps
+    denom = e2afs_sqrt_positive(v_hat) + eps
     p32 = p_ref[...].astype(jnp.float32)
     new_p = p32 - lr * (m_hat / denom + wd * p32)
     po_ref[...] = new_p.astype(po_ref.dtype)

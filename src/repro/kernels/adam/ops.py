@@ -21,9 +21,8 @@ __all__ = ["adam_update"]
 _WIDTH = LANE * 8
 
 
-@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block", "interpret"))
-def _pallas(p, g, m, v, *, block, interpret, lr, b1c=1.0, b2c=1.0,
-            b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+def _pallas_impl(p, g, m, v, *, block, interpret, lr, b1c=1.0, b2c=1.0,
+                 b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
     shape = p.shape
     n = p.size
     # clamp to the tensor's real row count: a (5,)-element bias must pad to
@@ -47,6 +46,18 @@ def _pallas(p, g, m, v, *, block, interpret, lr, b1c=1.0, b2c=1.0,
     return unflat(po, p.dtype), unflat(mo, jnp.float32), unflat(vo, jnp.float32)
 
 
+_jit = functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "wd", "block", "interpret"))
+_pallas_nodonate = _jit(_pallas_impl)
+# donating variant: p/m/v buffers are consumed and reused for the outputs,
+# so a fused optimizer step adds zero transient HBM on its 7 streams.  g is
+# NOT donated (callers may reuse grads for logging/metrics).
+_pallas_donate = _jit(_pallas_impl, donate_argnums=(0, 2, 3))
+
+
+def _pallas(p, g, m, v, *, donate: bool = False, **kw):
+    return (_pallas_donate if donate else _pallas_nodonate)(p, g, m, v, **kw)
+
+
 dispatch.register(
     dispatch.KernelSpec(
         name="adam",
@@ -60,8 +71,12 @@ dispatch.register(
 
 
 def adam_update(p, g, m, v, *, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1,
-                b1c=1.0, b2c=1.0, interpret: bool | None = None):
-    return dispatch.dispatch(
-        "adam", p, g, m, v,
-        lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c, interpret=interpret,
-    )
+                b1c=1.0, b2c=1.0, donate: bool = False, interpret: bool | None = None):
+    """One fused AdamW step.  ``donate=True`` hands the p/m/v buffers to the
+    kernel for in-place reuse — only safe when the caller rebinds them to the
+    returned values (the train loop does; benchmarks re-calling with the same
+    arrays must keep the default)."""
+    kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, wd=wd, b1c=b1c, b2c=b2c)
+    if donate:
+        kw["donate"] = True  # reference path doesn't take (or need) it
+    return dispatch.dispatch("adam", p, g, m, v, interpret=interpret, **kw)

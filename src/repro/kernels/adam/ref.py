@@ -8,7 +8,9 @@ from repro.core import get_unit
 __all__ = ["ref_adam_update"]
 
 
-def ref_adam_update(p, g, m, v, *, lr, b1, b2, eps, wd, b1c, b2c, sqrt_unit="e2afs"):
+def ref_adam_update(p, g, m, v, *, lr, b1, b2, eps, wd, b1c, b2c, sqrt_unit="e2afs",
+                    donate=False):
+    del donate  # buffer donation is a kernel-path concept; the oracle is pure
     unit = get_unit(sqrt_unit)
     g32 = g.astype(jnp.float32)
     m = b1 * m + (1 - b1) * g32

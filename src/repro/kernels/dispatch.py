@@ -52,11 +52,12 @@ BACKENDS = ("auto", "compiled", "interpret", "reference")
 
 # Kernels known to the repo; get() lazily imports the ops module that
 # registers each one, so importing dispatch never drags in Pallas code.
-KNOWN = ("adam", "e2afs_rsqrt", "e2afs_sqrt", "rmsnorm", "sobel")
+KNOWN = ("adam", "e2afs_rsqrt", "e2afs_sqrt", "kmeans_assign", "rmsnorm", "sobel")
 _OPS_MODULE = {
     "adam": "repro.kernels.adam.ops",
     "e2afs_rsqrt": "repro.kernels.e2afs_sqrt.ops",
     "e2afs_sqrt": "repro.kernels.e2afs_sqrt.ops",
+    "kmeans_assign": "repro.kernels.kmeans.ops",
     "rmsnorm": "repro.kernels.rmsnorm.ops",
     "sobel": "repro.kernels.sobel.ops",
 }
@@ -190,13 +191,18 @@ def dispatch(
 def as_blocked_2d(x: jax.Array, *, width: int, block_rows: int, pad_value=0.0) -> jax.Array:
     """Flatten to (rows, width) with rows % block_rows == 0, padding with
     ``pad_value`` (zeros-safe by default; elementwise sqrt paths pad with 1s
-    so padded lanes never hit the rsqrt(0)=inf special)."""
+    so padded lanes never hit the rsqrt(0)=inf special).
+
+    Zero-copy fast path: a block-aligned (rows, width) input is returned
+    unchanged — same buffer, no reshape, no pad."""
     n = x.size
     chunk = width * block_rows
     total = -(-max(n, 1) // chunk) * chunk
+    if total == n and x.ndim == 2 and x.shape[1] == width:
+        return x
     flat = x.reshape(-1)
     if total != n:
-        flat = jnp.concatenate([flat, jnp.full((total - n,), pad_value, x.dtype)])
+        flat = jnp.pad(flat, (0, total - n), constant_values=pad_value)
     return flat.reshape(total // width, width)
 
 
@@ -206,11 +212,12 @@ def unblock(y2d: jax.Array, n: int, shape: tuple) -> jax.Array:
 
 
 def pad_rows(x2d: jax.Array, block_rows: int, pad_value=0.0) -> jax.Array:
-    """Pad leading dim of (rows, d) to a multiple of block_rows."""
-    rows, d = x2d.shape
+    """Pad leading dim of (rows, d) to a multiple of block_rows; an
+    already-aligned input is returned unchanged (same buffer)."""
+    rows, _ = x2d.shape
     pad = (-rows) % block_rows
     if pad:
-        x2d = jnp.concatenate([x2d, jnp.full((pad, d), pad_value, x2d.dtype)])
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)), constant_values=pad_value)
     return x2d
 
 

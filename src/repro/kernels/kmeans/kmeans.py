@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused K-means assignment with in-kernel E2AFS sqrt.
+
+The paper's §4.2 Lloyd iteration as one fused kernel.  Pixels are tiled
+into (block_n, C) VMEM blocks; per tile the kernel computes squared
+distances to all K centroids (K stays resident in VMEM for every grid
+step), runs the distances through the E2AFS integer-datapath sqrt, takes
+the argmin, and accumulates per-centroid color sums and member counts into
+VMEM scratch accumulators that are flushed to HBM once, on the last grid
+step.  The naive path materializes an (N, K, C) difference tensor plus an
+(N, K) one-hot in HBM; here both exist only tile-sized in VMEM, so the HBM
+traffic per iteration is one read of the pixels plus O(K) outputs.
+
+The padded tail (N rounded up to the tile) is masked out of the
+accumulators via the true pixel count, passed as an SMEM scalar.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.e2afs import e2afs_sqrt_positive
+
+__all__ = ["kmeans_assign_kernel_call"]
+
+
+def _kernel(
+    n_ref, px_ref, cent_ref, assign_ref, sums_ref, counts_ref,
+    sums_acc, counts_acc, *, block_n: int, k: int,
+):
+    i = pl.program_id(0)
+    px = px_ref[...]  # (block_n, C)
+    cent = cent_ref[...]  # (K, C)
+
+    # squared distances, tile-local: (block_n, K, C) never leaves VMEM
+    diff = px[:, None, :] - cent[None, :, :]
+    d2 = jnp.sum(diff * diff, axis=-1)  # (block_n, K)
+    dist = e2afs_sqrt_positive(jnp.maximum(d2, 1e-9))  # E2AFS integer datapath
+    assign = jnp.argmin(dist, axis=1).astype(jnp.int32)  # (block_n,)
+    assign_ref[...] = assign[:, None]
+
+    # accumulate sums/counts, masking the padded tail past the true count
+    row = i * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n, 1), 0)
+    valid = row < n_ref[0]  # (block_n, 1)
+    onehot = assign[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block_n, k), 1)
+    onehot = jnp.where(valid & onehot, 1.0, 0.0)  # (block_n, K) f32
+
+    @pl.when(i == 0)
+    def _init():
+        sums_acc[...] = jnp.zeros_like(sums_acc)
+        counts_acc[...] = jnp.zeros_like(counts_acc)
+
+    sums_acc[...] += jnp.dot(onehot.T, px, preferred_element_type=jnp.float32)
+    counts_acc[...] += jnp.sum(onehot, axis=0)[None, :]
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        sums_ref[...] = sums_acc[...]
+        counts_ref[...] = counts_acc[...]
+
+
+def kmeans_assign_kernel_call(
+    px: jax.Array,
+    cent: jax.Array,
+    n: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = True,
+):
+    """px: (N_pad, C) f32 with N_pad % block_n == 0; cent: (K, C) f32;
+    n: (1,) int32 true pixel count (SMEM).  Returns (assign (N_pad, 1) i32,
+    sums (K, C) f32, counts (1, K) f32)."""
+    n_pad, c = px.shape
+    k = cent.shape[0]
+    assert n_pad % block_n == 0, (n_pad, block_n)
+    assert cent.shape == (k, c) and n.shape == (1,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_n=block_n, k=k),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((k, c), lambda i: (0, 0)),  # centroids resident in VMEM
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((k, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k, c), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k, c), jnp.float32),
+            pltpu.VMEM((1, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(n, px, cent)

@@ -1,0 +1,48 @@
+"""Public wrapper: fused K-means assignment for arbitrary pixel counts.
+
+Pixels are padded to the tile (zero rows, masked out of the accumulators
+by the true-count SMEM scalar, cropped from the returned assignments), so
+tile choice is purely a performance knob the dispatch layer autotunes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.kmeans.kmeans import kmeans_assign_kernel_call
+from repro.kernels.kmeans.ref import ref_kmeans_assign
+
+__all__ = ["kmeans_assign"]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def _pallas(px, cent, *, block, interpret):
+    n = px.shape[0]
+    bn = min(block[0], n)  # a tiny image must pad to one tile, not block_n rows
+    px_p = dispatch.pad_rows(px.astype(jnp.float32), bn)
+    assign, sums, counts = kmeans_assign_kernel_call(
+        px_p, cent.astype(jnp.float32), jnp.full((1,), n, jnp.int32),
+        block_n=bn, interpret=interpret,
+    )
+    return assign[:n, 0], sums, counts[0]
+
+
+dispatch.register(
+    dispatch.KernelSpec(
+        name="kmeans_assign",
+        reference=ref_kmeans_assign,
+        pallas=_pallas,
+        tiling=dispatch.TilingSpec(
+            default=(512,), candidates=((128,), (256,), (512,), (1024,), (2048,))
+        ),
+    )
+)
+
+
+def kmeans_assign(px: jax.Array, cent: jax.Array, *, interpret: bool | None = None):
+    """px: (N, C); cent: (K, C).  Returns (assign, sums, counts) for one
+    Lloyd iteration, computed in VMEM tiles (no (N, K, C) HBM intermediate)."""
+    return dispatch.dispatch("kmeans_assign", px, cent, interpret=interpret)

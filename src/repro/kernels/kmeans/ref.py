@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused K-means assignment kernel.
+
+The naive broadcast path: materializes the (N, K, C) difference tensor and
+the (N, K) one-hot the kernel exists to avoid — kept bit-faithful to the
+kernel's arithmetic (same summation axis order, same E2AFS sqrt, same
+argmin tie-break) so assignment parity is exact away from decision
+boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_unit
+
+__all__ = ["ref_kmeans_assign"]
+
+
+def ref_kmeans_assign(px: jax.Array, cent: jax.Array, *, sqrt_unit: str = "e2afs"):
+    """px: (N, C); cent: (K, C).  Returns (assign (N,) i32, sums (K, C),
+    counts (K,)) — the per-iteration Lloyd statistics."""
+    unit = get_unit(sqrt_unit)
+    px = px.astype(jnp.float32)
+    cent = cent.astype(jnp.float32)
+    d2 = jnp.sum((px[:, None, :] - cent[None, :, :]) ** 2, axis=-1)
+    dist = unit.sqrt(jnp.maximum(d2, 1e-9))
+    assign = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(assign, cent.shape[0], dtype=jnp.float32)
+    return assign, onehot.T @ px, onehot.sum(0)

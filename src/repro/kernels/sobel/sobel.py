@@ -14,18 +14,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import numerics
-from repro.core.e2afs import _e2afs_mantissa_exponent
+from repro.core.e2afs import e2afs_sqrt_positive
 
 __all__ = ["sobel_kernel_call"]
-
-
-def _sqrt_f32(x):
-    fmt = numerics.FP32
-    sign, exp, man = numerics.decompose(x, fmt)
-    exp_out, man_out = _e2afs_mantissa_exponent(exp, man, fmt)
-    res = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
-    return jnp.where(x <= 0.0, jnp.zeros_like(res), res)
 
 
 def _kernel(img_ref, o_ref, *, bh: int, bw: int):
@@ -37,7 +28,7 @@ def _kernel(img_ref, o_ref, *, bh: int, bw: int):
     gx = (c(0, 2) - c(0, 0)) + 2.0 * (c(1, 2) - c(1, 0)) + (c(2, 2) - c(2, 0))
     gy = (c(2, 0) - c(0, 0)) + 2.0 * (c(2, 1) - c(0, 1)) + (c(2, 2) - c(0, 2))
     mag2 = jnp.maximum(gx * gx + gy * gy, 1e-12)
-    o_ref[...] = _sqrt_f32(mag2)
+    o_ref[...] = e2afs_sqrt_positive(mag2)
 
 
 def sobel_kernel_call(img: jax.Array, *, bh: int = 64, bw: int = 128, interpret: bool = True):

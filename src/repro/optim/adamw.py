@@ -33,6 +33,12 @@ class AdamWConfig:
     # route the whole m/v/p update through the fused Pallas AdamW kernel
     # (dispatch layer resolves backend + tiling); requires sqrt_unit="e2afs".
     fused: bool = False
+    # fused path: donate param/moment buffers to the kernel so the step
+    # updates them in place.  Opt-in because an eager call deletes the
+    # caller's p/m/v buffers as a side effect; only enable when they are
+    # rebound to the returned values (jitted train steps get the same effect
+    # from donate_argnums at the step boundary, as launch/train.py does).
+    donate: bool = False
 
 
 def adamw_init(params):
@@ -102,7 +108,7 @@ def adamw_update(cfg: AdamWConfig, grads, state, params):
         def upd(g, m, v, p):
             return fused_adam_update(
                 p, g, m, v, lr=lr, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
-                wd=cfg.weight_decay, b1c=b1c, b2c=b2c,
+                wd=cfg.weight_decay, b1c=b1c, b2c=b2c, donate=cfg.donate,
             )
     else:
         upd = upd_jnp

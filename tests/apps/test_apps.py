@@ -57,6 +57,20 @@ class TestSobelPipeline:
         assert e.shape == (126, 126)
         assert e.min() >= 0 and e.max() <= 255
 
+    def test_use_kernel_requires_e2afs(self):
+        from repro.apps.sobel import edge_map
+
+        img = make_image("house", 64)
+        with pytest.raises(ValueError, match="requires sqrt_unit='e2afs'"):
+            edge_map(img, "esas", use_kernel=True)
+
+    def test_use_kernel_e2afs_route(self):
+        from repro.apps.sobel import edge_map
+
+        img = make_image("house", 64)
+        e = edge_map(img, "e2afs", use_kernel=True)
+        np.testing.assert_allclose(e, edge_map(img, "e2afs"), rtol=1e-5, atol=1e-3)
+
     def test_orderings_match_paper(self):
         """cwaha8 >= e2afs >= cwaha4-ish on PSNR (paper Table 4 ordering)."""
         from repro.apps.sobel import evaluate_units

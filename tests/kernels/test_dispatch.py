@@ -199,6 +199,20 @@ class TestIntegrationRoutes:
         b = norms.rmsnorm(scale, x, sqrt_unit="e2afs", fused=True)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-2)
 
+    def test_adam_donate_matches_and_consumes_buffers(self):
+        from repro.kernels.adam.ops import adam_update
+
+        args, kw = _inputs("adam")
+        ref = jax.tree.map(jnp.copy, dispatch.get("adam").reference(*args, **kw))
+        p, g, m, v = _inputs("adam")[0]
+        out = adam_update(p, g, m, v, **kw, donate=True)
+        for o, r in zip(out, ref):
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=1e-6, atol=1e-7)
+        if dispatch.resolve_backend() != "reference":
+            # param/moment buffers were donated to the kernel; grads were not
+            assert p.is_deleted() and m.is_deleted() and v.is_deleted()
+            assert not g.is_deleted()
+
     def test_fused_adamw_matches_unfused_under_jit(self):
         from repro.optim import AdamWConfig, adamw_init, adamw_update
 
