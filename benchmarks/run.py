@@ -17,6 +17,7 @@ SUITES = (
     "fig5_kmeans",      # paper Fig 5, K-means color quantization
     "kernels_bench",    # kernel microbench (informational)
     "kmeans_bench",     # fused vs broadcast K-means iteration (informational)
+    "serve_bench",      # prefill + scan decode vs per-token loop (informational)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 

@@ -1,0 +1,77 @@
+"""Serving fast path: one-shot prefill + scan decode vs the per-token loop.
+
+Runs the same prompt through both serve modes (warmup separated from the
+timed pass inside ``serve.generate``) and records prefill wall clock,
+decode tok/s and the loop->scan speedups to
+``experiments/results/serve_bench.json``.  Greedy tokens must agree between
+the modes (MoE archs exempt: prefill routing capacity is sequence-level) —
+the bench doubles as an end-to-end parity check.
+
+Shape knobs for CI smokes (tiny config, few decode steps):
+    REPRO_SERVE_BENCH_ARCH   (default qwen3-4b)
+    REPRO_SERVE_BENCH_BATCH  (default 2)
+    REPRO_SERVE_BENCH_PROMPT (default 16)
+    REPRO_SERVE_BENCH_GEN    (default 16)
+    REPRO_SERVE_BENCH_REPS   (default 5, best-of timed passes)
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import md_table, save
+from repro.launch.serve import generate
+
+
+def run():
+    arch = os.environ.get("REPRO_SERVE_BENCH_ARCH", "qwen3-4b")
+    batch = int(os.environ.get("REPRO_SERVE_BENCH_BATCH", 2))
+    prompt_len = int(os.environ.get("REPRO_SERVE_BENCH_PROMPT", 16))
+    gen_len = int(os.environ.get("REPRO_SERVE_BENCH_GEN", 16))
+    reps = int(os.environ.get("REPRO_SERVE_BENCH_REPS", 5))
+    kw = dict(batch=batch, prompt_len=prompt_len, gen_len=gen_len, reps=reps,
+              verbose=False)
+
+    toks_loop, s_loop = generate(arch, mode="loop", **kw)
+    toks_scan, s_scan = generate(arch, mode="scan", **kw)
+    tokens_match = bool(np.array_equal(toks_loop, toks_scan))
+
+    prefill_speedup = s_loop["prefill_ms"] / max(s_scan["prefill_ms"], 1e-9)
+    decode_speedup = s_scan["decode_tok_s"] / max(s_loop["decode_tok_s"], 1e-9)
+
+    rows = [
+        ["loop[baseline]", f"{s_loop['prefill_ms']:.1f}",
+         f"{s_loop['decode_ms_per_token']:.2f}", f"{s_loop['decode_tok_s']:.1f}"],
+        ["scan[fast path]", f"{s_scan['prefill_ms']:.1f}",
+         f"{s_scan['decode_ms_per_token']:.2f}", f"{s_scan['decode_tok_s']:.1f}"],
+    ]
+    print(f"\n== Serve bench ({arch}, b={batch}, prompt={prompt_len}, "
+          f"gen={gen_len}; informational) ==")
+    print(md_table(["path", "prefill ms", "ms/token", "tok/s"], rows))
+    print(f"prefill speedup {prefill_speedup:.1f}x; decode speedup "
+          f"{decode_speedup:.1f}x; tokens_match={tokens_match}")
+
+    payload = {
+        "arch": arch,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "gen_len": gen_len,
+        "prefill_loop_ms": s_loop["prefill_ms"],
+        "prefill_scan_ms": s_scan["prefill_ms"],
+        "prefill_speedup": prefill_speedup,
+        "decode_loop_tok_s": s_loop["decode_tok_s"],
+        "decode_scan_tok_s": s_scan["decode_tok_s"],
+        "decode_loop_ms_per_token": s_loop["decode_ms_per_token"],
+        "decode_scan_ms_per_token": s_scan["decode_ms_per_token"],
+        "decode_speedup": decode_speedup,
+        "tokens_match": tokens_match,
+    }
+    save("serve_bench", payload)
+    # after save, so the JSON survives for debugging; MoE archs are exempt
+    # (prefill routing is sequence-level — serve.generate stats explain)
+    if s_scan["token_exact_vs_loop"] and not tokens_match:
+        raise AssertionError(
+            "serve fast path diverged from the loop baseline greedy tokens"
+        )
+    return payload

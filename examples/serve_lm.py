@@ -1,5 +1,6 @@
 """Serving example: batched greedy decoding with a KV cache (optionally
-int8-quantized) through the framework's serve path.
+int8-quantized) through the framework's serve fast path (one-shot prefill +
+scan decode with donated buffers).
 
     PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-2.7b]
 """
@@ -12,10 +13,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     args = ap.parse_args()
-    toks_bf16 = generate(args.arch, batch=2, gen_len=16, quantized_kv=False)
-    toks_int8 = generate(args.arch, batch=2, gen_len=16, quantized_kv=True)
+    toks_bf16, _ = generate(args.arch, batch=2, gen_len=16, quantized_kv=False)
+    toks_int8, stats = generate(args.arch, batch=2, gen_len=16, quantized_kv=True)
     agree = (toks_bf16 == toks_int8).mean()
-    print(f"int8-KV agreement with bf16 KV (greedy tokens): {agree:.2%}")
+    print(f"int8-KV agreement with bf16 KV (greedy tokens): {agree:.2%} "
+          f"({stats['decode_tok_s']:.1f} tok/s int8)")
 
 
 if __name__ == "__main__":

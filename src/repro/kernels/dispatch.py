@@ -39,6 +39,7 @@ __all__ = [
     "get",
     "make_differentiable_rsqrt",
     "make_differentiable_sqrt",
+    "pad2d_to_multiple",
     "pad_rows",
     "register",
     "registered",
@@ -219,6 +220,23 @@ def pad_rows(x2d: jax.Array, block_rows: int, pad_value=0.0) -> jax.Array:
     if pad:
         x2d = jnp.pad(x2d, ((0, pad), (0, 0)), constant_values=pad_value)
     return x2d
+
+
+def pad2d_to_multiple(x: jax.Array, block: Sequence[int], *, halo: int = 0,
+                      mode: str = "edge") -> jax.Array:
+    """Pad the trailing 2D dims of ``x`` so (dim - halo) is a multiple of the
+    block — the stencil-kernel analogue of :func:`pad_rows` (``halo`` is the
+    border a stencil consumes, e.g. 2 for a 3x3).  An already-aligned input
+    is returned unchanged (same buffer); padding replicates edges by default
+    so stencil taps over padded lanes stay finite."""
+    bh, bw = block
+    h, w = x.shape[-2:]
+    ph = (-(h - halo)) % bh
+    pw = (-(w - halo)) % bw
+    if not (ph or pw):
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, ph), (0, pw)]
+    return jnp.pad(x, cfg, mode=mode)
 
 
 # ---------------------------------------------------------------------------

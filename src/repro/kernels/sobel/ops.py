@@ -1,8 +1,9 @@
-"""Public wrapper: Sobel magnitude for arbitrary image sizes (pads to tile).
+"""Public wrapper: Sobel magnitude for arbitrary image sizes.
 
-The image is edge-padded so any candidate tile divides the output; padding
-columns/rows are cropped after the kernel, so tile choice is purely a
-performance knob the dispatch layer is free to autotune.
+Pad-to-tile / crop lives inside :func:`sobel_kernel_call` via the dispatch
+layer's shared stencil plumbing (``pad2d_to_multiple``: zero-copy when the
+output already divides the tile), so tile choice is purely a performance
+knob the dispatch layer is free to autotune.
 """
 from __future__ import annotations
 
@@ -21,13 +22,7 @@ __all__ = ["sobel_magnitude"]
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def _pallas(img, *, block, interpret):
     bh, bw = block
-    h, w = img.shape
-    oh, ow = h - 2, w - 2
-    ph = (-oh) % bh
-    pw = (-ow) % bw
-    padded = jnp.pad(img.astype(jnp.float32), ((0, ph), (0, pw)), mode="edge")
-    out = sobel_kernel_call(padded, bh=bh, bw=bw, interpret=interpret)
-    return out[:oh, :ow]
+    return sobel_kernel_call(img.astype(jnp.float32), bh=bh, bw=bw, interpret=interpret)
 
 
 dispatch.register(

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.e2afs import e2afs_sqrt_positive
+from repro.kernels.dispatch import pad2d_to_multiple
 
 __all__ = ["sobel_kernel_call"]
 
@@ -32,15 +33,21 @@ def _kernel(img_ref, o_ref, *, bh: int, bw: int):
 
 
 def sobel_kernel_call(img: jax.Array, *, bh: int = 64, bw: int = 128, interpret: bool = True):
-    """img: (H, W) f32; H-2, W-2 must divide by (bh, bw)."""
-    h, w = img.shape
-    oh, ow = h - 2, w - 2
-    assert oh % bh == 0 and ow % bw == 0, (oh, ow, bh, bw)
-    return pl.pallas_call(
+    """img: (H, W) f32, any size >= 3x3.  Returns (H-2, W-2) magnitude.
+
+    Arbitrary sizes go through the dispatch layer's shared stencil padding:
+    the image is edge-padded so the output divides the tile (zero-copy when
+    already aligned) and the padded lanes are cropped after the kernel —
+    tile choice stays purely a performance knob."""
+    oh, ow = img.shape[0] - 2, img.shape[1] - 2
+    padded = pad2d_to_multiple(img, (bh, bw), halo=2, mode="edge")
+    ph, pw = padded.shape[0] - 2, padded.shape[1] - 2
+    out = pl.pallas_call(
         functools.partial(_kernel, bh=bh, bw=bw),
-        grid=(oh // bh, ow // bw),
-        in_specs=[pl.BlockSpec(img.shape, lambda i, j: (0, 0))],  # whole image in VMEM
+        grid=(ph // bh, pw // bw),
+        in_specs=[pl.BlockSpec(padded.shape, lambda i, j: (0, 0))],  # whole image in VMEM
         out_specs=pl.BlockSpec((bh, bw), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((oh, ow), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((ph, pw), jnp.float32),
         interpret=interpret,
-    )(img)
+    )(padded)
+    return out[:oh, :ow]

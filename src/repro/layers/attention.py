@@ -22,9 +22,11 @@ from repro.layers.rope import apply_rope
 __all__ = [
     "attention_init",
     "attention_train",
+    "attention_prefill",
     "attention_decode",
     "init_kv_cache",
     "kv_cache_specs",
+    "prefill_cache_write",
 ]
 
 NEG_INF = -2.0e38
@@ -247,6 +249,147 @@ def _cache_read(buf, layer_idx):
     )
 
 
+def _prefill_update(buf, new, layer_idx):
+    """Write tokens [0, s) of one cache buffer in a single DUS.  ``new`` is
+    (b, s, ...); with ``layer_idx`` the buffer carries a leading stacked
+    (L, ...) axis and only this layer's plane is touched."""
+    if layer_idx is None:
+        return jax.lax.dynamic_update_slice(
+            buf, new.astype(buf.dtype), (0,) * buf.ndim
+        )
+    start = (layer_idx,) + (0,) * (buf.ndim - 1)
+    return jax.lax.dynamic_update_slice(buf, new[None].astype(buf.dtype), start)
+
+
+def _prefill_write_entries(cache, entries, *, layer_idx, ring):
+    """Land per-buffer (b, s, ...) prompt tensors in the cache, one DUS
+    each.  Only ring buffers (sliding-window layers) may be shorter than
+    the prompt — there the last ``cache_len`` tokens survive, rolled so
+    token ``pos`` sits at its decode slot ``pos % cache_len``; quantized
+    values and scales are per-token, so rolling them is exact."""
+    t_axis = 1 if layer_idx is None else 2
+    cache_len = cache["k"].shape[t_axis]
+    s = entries["k"].shape[1]
+    if s > cache_len:
+        if not ring:
+            raise ValueError(
+                f"prompt ({s} tokens) does not fit a non-ring cache of "
+                f"length {cache_len}; allocate >= prompt_len + gen_len slots"
+            )
+        shift = s % cache_len  # slot of the oldest surviving token
+        entries = {
+            name: jnp.roll(a[:, -cache_len:], shift, axis=1)
+            for name, a in entries.items()
+        }
+    return dict(
+        cache,
+        **{
+            name: _prefill_update(cache[name], a, layer_idx)
+            for name, a in entries.items()
+        },
+    )
+
+
+def _quantized_entries(k_new, v_new):
+    """Quantize full-sequence K/V through the same :func:`_quantize_kv` path
+    the decode write uses (the scale reduce vectorizes over the token axis,
+    so per-token values and scales are bit-identical to the step-loop's)."""
+    kq, ks = _quantize_kv(k_new)
+    vq, vs = _quantize_kv(v_new)
+    return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+
+def prefill_cache_write(cache, k_new, v_new, *, layer_idx=None, ring=False):
+    """Batched analogue of the decode write: tokens [0, s) of ``k_new`` /
+    ``v_new`` (b, s, kv, hd) land in the cache via one dynamic_update_slice
+    per buffer, instead of s per-token line writes.  int8 caches quantize
+    through the decode write's path; ``ring=True`` (sliding-window layers)
+    allows a cache shorter than the prompt — see _prefill_write_entries."""
+    if cache["k"].dtype == jnp.int8:
+        entries = _quantized_entries(k_new, v_new)
+    else:
+        entries = {"k": k_new, "v": v_new}
+    return _prefill_write_entries(cache, entries, layer_idx=layer_idx, ring=ring)
+
+
+def _fold_masked_attention(q, k, v, mask, scale, k_scale, v_scale, out_dtype):
+    """The decode-contract scored-attention block, shared by
+    :func:`attention_decode` and :func:`attention_prefill` so the
+    prefill-vs-decode bit-exactness contract lives in ONE place: fp32
+    scores, int8 cache scales FOLDED into scores / weights (never a
+    dequantized cache copy), additive fp32 mask, fp32 softmax.
+
+    q: (b, sq, h, hd); k/v: (b, t, kv, hd), int8 values pre-cast to
+    ``out_dtype``; mask: (sq, t) additive; scales: (b, t, kv) or None.
+    Returns (b, sq, h, hd) — the wo projection stays with the caller.
+    """
+    g = q.shape[2] // k.shape[2]
+    scores = _gqa_scores(q, k).astype(jnp.float32) * scale  # (b, h, sq, t)
+    if k_scale is not None:
+        ks = jnp.repeat(jnp.moveaxis(k_scale, 1, 2), g, axis=1)  # (b, h, t)
+        scores = scores * ks[:, :, None, :]
+    scores = scores + mask[None, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
+    if v_scale is not None:
+        vs = jnp.repeat(jnp.moveaxis(v_scale, 1, 2), g, axis=1)
+        w = w * vs[:, :, None, :].astype(w.dtype)
+    return _gqa_out(w, v)
+
+
+def attention_prefill(p, cfg, x, cache, positions, *, window: Optional[int] = None,
+                      layer_idx=None, q_chunk: int = 1024):
+    """Full-sequence causal (or sliding-window) attention over the prompt
+    that also writes tokens [0, s) of the KV cache in one shot.
+
+    x: (b, s, d); ``cache`` must be empty (prefill owns positions [0, s)).
+    Attention runs over the in-flight K/V — not a cache readback — through
+    the same scored-attention block as :func:`attention_decode`
+    (fp32 scores, folded int8 scales), so prefill is bit-exact against the
+    step loop.  Prompts longer than ``q_chunk`` process queries in chunks
+    (lax.scan) so the fp32 score tensor stays (b, h, q_chunk, s) instead of
+    O(s^2) — softmax is per query row, so chunking preserves the contract.
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    use_rope = cfg.pos == "rope"
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=use_rope)
+    ring = window is not None
+    k_scale = v_scale = None
+    if cache["k"].dtype == jnp.int8:
+        # quantize ONCE: the written entries and the in-flight scoring K/V
+        # share the same quantization
+        entries = _quantized_entries(k, v)
+        cache = _prefill_write_entries(cache, entries, layer_idx=layer_idx, ring=ring)
+        k = entries["k"].astype(x.dtype)
+        v = entries["v"].astype(x.dtype)
+        k_scale, v_scale = entries["k_scale"], entries["v_scale"]
+    else:
+        cache = _prefill_write_entries(
+            cache, {"k": k, "v": v}, layer_idx=layer_idx, ring=ring
+        )
+
+    scale = cfg.d_head**-0.5
+    mode = "window" if window else "causal"
+    if s <= q_chunk or s % q_chunk:
+        mask = _mask(mode, positions, positions, window)
+        out = _fold_masked_attention(q, k, v, mask, scale, k_scale, v_scale, x.dtype)
+    else:
+        nc = s // q_chunk
+        qc = jnp.moveaxis(q.reshape(b, nc, q_chunk, *q.shape[2:]), 1, 0)
+        pc = positions.reshape(nc, q_chunk)
+
+        def chunk_body(_, inp):
+            qi, pi = inp
+            m = _mask(mode, pi, positions, window)
+            return None, _fold_masked_attention(
+                qi, k, v, m, scale, k_scale, v_scale, x.dtype
+            )
+
+        _, out = jax.lax.scan(chunk_body, None, (qc, pc))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, *q.shape[2:])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), cache
+
+
 def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
                      layer_idx=None):
     """Single-token decode. x: (b, 1, d); cache holds ``cache_len`` slots.
@@ -296,28 +439,17 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
         k = _cache_read(cache["k"], layer_idx)
         v = _cache_read(cache["v"], layer_idx)
 
-    scale = cfg.d_head**-0.5
-    scores = _gqa_scores(q, k).astype(jnp.float32) * scale  # (b,h,1,T)
-    g = q.shape[2] // cache["k"].shape[2 if layer_idx is None else 3]
-    if k_scale is not None:
-        # fold per-(b,t,kv) k scales into scores: (b,t,kv) -> (b,h,1,t)
-        ks = jnp.repeat(jnp.moveaxis(k_scale, 1, 2), g, axis=1)
-        scores = scores * ks[:, :, None, :]
-    # mask out unwritten / out-of-window slots
+    # mask out unwritten slots: before the ring wraps only slots <= pos hold
+    # tokens (treating unwritten zero-K slots as valid leaks exp(0) mass
+    # into early softmaxes); once pos >= cache_len every slot is live
     t_idx = jnp.arange(cache_len)
+    valid = t_idx <= pos
     if window:
-        valid = (t_idx <= pos) if cache_len > window else jnp.ones_like(t_idx, bool)
-        # ring buffer: all slots valid once pos >= cache_len
         valid = valid | (pos >= cache_len)
-    else:
-        valid = t_idx <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    if v_scale is not None:
-        # fold v scales into the (tiny) attention weights pre-contraction
-        vs = jnp.repeat(jnp.moveaxis(v_scale, 1, 2), g, axis=1)
-        w = w * vs[:, :, None, :].astype(w.dtype)
-    out = _gqa_out(w, v)
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, t) additive
+    out = _fold_masked_attention(
+        q, k, v, mask, cfg.d_head**-0.5, k_scale, v_scale, x.dtype
+    )
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, cache
 

@@ -50,11 +50,14 @@ def _gates(p, cfg, xr):
     return a, norm * i * xr.astype(jnp.float32)
 
 
-def rglru_train(p, cfg, x):
+def rglru_train(p, cfg, x, *, return_state: bool = False):
+    """With ``return_state`` also returns the decode state after the last
+    token — (conv tail, final hidden) in the :func:`init_rglru_state` layout
+    — so a single full-sequence prefill can seed :func:`rglru_decode`."""
     dt = x.dtype
     gate = jax.nn.gelu(jnp.einsum("bsd,dk->bsk", x, p["gate_proj"].astype(dt)))
-    xr = jnp.einsum("bsd,dk->bsk", x, p["x_proj"].astype(dt))
-    xr = _causal_conv(xr, p["conv_w"].astype(dt))
+    xr_raw = jnp.einsum("bsd,dk->bsk", x, p["x_proj"].astype(dt))
+    xr = _causal_conv(xr_raw, p["conv_w"].astype(dt))
     a, b_in = _gates(p, cfg, xr)
 
     # affine recurrence h_t = a_t h_{t-1} + b_t via associative scan
@@ -65,7 +68,14 @@ def rglru_train(p, cfg, x):
 
     _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
     y = h.astype(dt) * gate
-    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt))
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt))
+    if not return_state:
+        return out
+    slen = x.shape[1]
+    tail = xr_raw[:, -(CONV_W - 1):]
+    if slen < CONV_W - 1:  # short prompt: older lines keep the zero init
+        tail = jnp.pad(tail, ((0, 0), (CONV_W - 1 - slen, 0), (0, 0)))
+    return out, {"conv": tail, "h": h[:, -1]}
 
 
 def init_rglru_state(cfg, batch, dtype):

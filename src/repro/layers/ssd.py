@@ -51,18 +51,31 @@ def _causal_conv(xbc, w):
     return out
 
 
-def ssd_train(p, cfg, x, *, chunk: int = 128):
-    """x: (b, s, d) -> (b, s, d).  s must be a multiple of ``chunk``."""
+def ssd_train(p, cfg, x, *, chunk: int = 128, return_state: bool = False):
+    """x: (b, s, d) -> (b, s, d).  s must be a multiple of ``chunk``.
+
+    With ``return_state`` also returns the decode state after the last token
+    — (conv tail, final SSM state) in the :func:`init_ssd_state` layout — so
+    a single full-sequence prefill can seed :func:`ssd_decode`.
+    """
     s_cfg = cfg.ssm
     d_in, n, hp = s_cfg.d_inner, s_cfg.d_state, s_cfg.head_dim
     nh = d_in // hp
     b, slen, _ = x.shape
     chunk = min(chunk, slen)
-    assert slen % chunk == 0, (slen, chunk)
+    # front-pad to a chunk multiple so any length keeps full-size chunks:
+    # zero tokens project to xs = B = C = 0, so they contribute nothing to
+    # the outputs or the carried state (their dt only decays the zero init),
+    # and zero history is exactly what the causal conv assumes anyway
+    pad = (-slen) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, 0), (0, 0)))
+    slen_p = slen + pad
     dt_act = x.dtype
 
     proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_act))
     z, xbc, dt = _split_proj(cfg, proj)
+    xbc_raw = xbc  # pre-conv projections: the decode conv state is their tail
     xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt_act)))
     xs, B, C = xbc[..., :d_in], xbc[..., d_in : d_in + n], xbc[..., d_in + n :]
 
@@ -70,7 +83,7 @@ def ssd_train(p, cfg, x, *, chunk: int = 128):
     a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (nh,) negative
     log_decay = dt * a[None, None, :]  # (b,s,nh) = log a_t
 
-    nc = slen // chunk
+    nc = slen_p // chunk
     xh = xs.reshape(b, nc, chunk, nh, hp)
     Bc = B.reshape(b, nc, chunk, n)
     Cc = C.reshape(b, nc, chunk, n)
@@ -100,7 +113,7 @@ def ssd_train(p, cfg, x, *, chunk: int = 128):
         return new, carry  # emit state *entering* this chunk
 
     init = jnp.zeros((b, nh, n, hp), jnp.float32)
-    _, S_in = jax.lax.scan(
+    S_final, S_in = jax.lax.scan(
         step, init, (jnp.moveaxis(Sc, 1, 0), jnp.moveaxis(total_decay, 1, 0))
     )
     S_in = jnp.moveaxis(S_in, 0, 1)  # (b,nc,h,n,p) state entering each chunk
@@ -109,10 +122,16 @@ def ssd_train(p, cfg, x, *, chunk: int = 128):
     decay_from_start = jnp.exp(cum)  # (b,nc,q,nh)
     y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", Cc.astype(jnp.float32), S_in, decay_from_start)
 
-    y = (y_intra + y_inter).reshape(b, slen, nh, hp)
-    y = y + p["d_skip"][None, None, :, None] * xs.reshape(b, slen, nh, hp).astype(jnp.float32)
-    y = y.reshape(b, slen, d_in).astype(dt_act) * jax.nn.silu(z)
-    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_act))
+    y = (y_intra + y_inter).reshape(b, slen_p, nh, hp)
+    y = y + p["d_skip"][None, None, :, None] * xs.reshape(b, slen_p, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, slen_p, d_in).astype(dt_act) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_act))[:, pad:]
+    if not return_state:
+        return out
+    tail = xbc_raw[:, -(CONV_W - 1):]
+    if slen < CONV_W - 1:  # short prompt: older lines keep the zero init
+        tail = jnp.pad(tail, ((0, 0), (CONV_W - 1 - slen, 0), (0, 0)))
+    return out, {"conv": tail, "ssm": S_final}
 
 
 def init_ssd_state(cfg, batch, dtype):

@@ -7,6 +7,9 @@ Entry points:
     forward(params, cfg, batch)        -> (logits, aux)
     init_cache(cfg, batch, cache_len)  -> (cache, specs)
     decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+    prefill(params, cfg, cache, tokens)          -> (logits, cache)
+    generate_scan(params, cfg, cache, tok, start_pos, gen_len)
+                                       -> (tokens, next_tok, cache)
 
 Batch dict keys:
     tokens  (b, s) int32            — text tokens (decoder side)
@@ -31,7 +34,15 @@ from repro.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
 from repro.layers.param import DenseInit
 from repro.models.config import ModelConfig
 
-__all__ = ["init", "forward", "init_cache", "decode_step", "param_count"]
+__all__ = [
+    "init",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "prefill",
+    "generate_scan",
+    "param_count",
+]
 
 
 def _act_dtype(cfg):
@@ -470,6 +481,148 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
     logits = jnp.einsum("bsd,dv->bsv", x, unembed)
     return logits[..., : cfg.vocab], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Serving fast path: one-shot prefill + scan-based greedy decode
+# ---------------------------------------------------------------------------
+
+
+def _layer_prefill(p, cfg, block, x, cache, positions, *, cross_kv=None, layer_idx=None):
+    """One decoder layer over the whole prompt, writing its cache slice in a
+    single batched update: attention layers DUS tokens [0, s) of their KV
+    buffers (quantizing through the decode write's path for int8 caches);
+    SSM / RG-LRU layers write the recurrent state after the last token."""
+    if block in ("global", "window"):
+        h = _norm(p, "ln1", x, cfg)
+        h, cache = attn.attention_prefill(
+            p["attn"], cfg, h, cache, positions,
+            window=cfg.window if block == "window" else None,
+            layer_idx=layer_idx,
+        )
+        x = x + h
+        if cross_kv is not None:
+            x = x + attn.cross_attention_decode(p["xattn"], cfg, _norm(p, "lnx", x, cfg), cross_kv)
+        h = _norm(p, "ln2", x, cfg)
+        if cfg.moe is not None:
+            h, _ = moe_lib.moe_apply(p["moe"], cfg, h, capacity_factor=cfg.moe.capacity_factor)
+        else:
+            h = mlp_apply(p["mlp"], cfg, h)
+        x = x + h
+    elif block == "ssd":
+        h, st = ssd_lib.ssd_train(p["mixer"], cfg, _norm(p, "ln1", x, cfg), return_state=True)
+        cache = ssd_lib.write_state(cache, st, layer_idx)
+        x = x + h
+    elif block == "rglru":
+        h, st = rglru_lib.rglru_train(
+            p["mixer"], cfg, _norm(p, "ln1", x, cfg), return_state=True
+        )
+        cache = ssd_lib.write_state(cache, st, layer_idx)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg))
+    return x, cache
+
+
+def prefill(params, cfg: ModelConfig, cache, tokens, *, cross_kv=None,
+            last_logit_only: bool = False):
+    """One-shot batched prefill: a single full-sequence forward over the
+    prompt that writes positions [0, s) of every layer's cache, replacing
+    the token-at-a-time teacher-forcing loop (s decode_step dispatches and
+    s masked full-cache attention passes collapse into one causal forward).
+
+    tokens: (b, s) int32 with s >= 1; ``cache`` must be freshly initialized
+    (prefill owns positions [0, s)).  Returns (logits (b, s, vocab), cache);
+    logits at position i condition on tokens [0, i], so
+    ``argmax(logits[:, -1])`` is the first generated token.  Serving wants
+    only that last column — ``last_logit_only`` skips the other s-1 unembed
+    rows (s x fewer unembed FLOPs, no (b, s, vocab) buffer) and returns
+    (b, 1, vocab).
+
+    Matches stepping :func:`decode_step` over the prompt for attention /
+    SSM / RG-LRU stacks (float caches reproduce the step-loop's cache
+    contents; int8 caches quantize through the same path).  MoE layers
+    route with a sequence-level expert capacity during prefill, so
+    dropped-token behavior may differ from per-token stepping.
+    """
+    b, s = tokens.shape
+    if s < 1:
+        raise ValueError(
+            f"prefill needs at least one prompt token, got tokens shape {tokens.shape}"
+        )
+    dt = _act_dtype(cfg)
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    positions = jnp.arange(s)
+    if cfg.pos == "sinusoidal":
+        x = x + _sinusoidal(s, cfg.d_model).astype(dt)[None]
+
+    blocks = cfg.blocks
+    if cfg.uniform:
+        # stacked cache rides in the CARRY, one layer plane written per step
+        idxs = jnp.arange(cfg.n_layers)
+        if cross_kv is not None:
+
+            def body(carry, layer):
+                x, c = carry
+                p, ckv, i = layer
+                x, c = _layer_prefill(
+                    p, cfg, blocks[0], x, c, positions, cross_kv=ckv, layer_idx=i
+                )
+                return (x, c), None
+
+            (x, cache), _ = jax.lax.scan(
+                body, (x, cache), (params["layers"], cross_kv, idxs)
+            )
+        else:
+
+            def body(carry, layer):
+                x, c = carry
+                p, i = layer
+                x, c = _layer_prefill(p, cfg, blocks[0], x, c, positions, layer_idx=i)
+                return (x, c), None
+
+            (x, cache), _ = jax.lax.scan(body, (x, cache), (params["layers"], idxs))
+    else:
+        new_cache = []
+        for p, bk, c in zip(params["layers"], blocks, cache):
+            x, c = _layer_prefill(p, cfg, bk, x, c, positions, cross_kv=cross_kv)
+            new_cache.append(c)
+        cache = new_cache
+
+    if last_logit_only:
+        x = x[:, -1:]
+    x = _norm(params, "ln_f", x, cfg)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    return logits[..., : cfg.vocab], cache
+
+
+def generate_scan(params, cfg: ModelConfig, cache, tok, start_pos, gen_len: int,
+                  *, cross_kv=None):
+    """Greedy decode as ONE device call: a ``lax.scan`` over ``gen_len``
+    decode_steps, replacing the per-token Python dispatch loop.
+
+    tok: (b, 1) int32, the first token to feed (usually the prefill argmax);
+    start_pos: scalar int32 position of that token; gen_len must be static.
+    Returns (tokens (b, gen_len), next_tok (b, 1), cache); tokens[:, 0] ==
+    tok — the same convention as the loop baseline (each emitted token is
+    the one *fed* at that step) — and ``next_tok`` is the argmax after the
+    last step, so a follow-up call continues generation seamlessly.  Jit
+    with ``donate_argnums`` on the cache and token operands: both reappear
+    in the output (cache carry, next_tok), so donation aliases their buffers
+    instead of holding a second full-size cache alive across the call.
+    """
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+
+    def step(carry, i):
+        c, t = carry
+        logits, c = decode_step(params, cfg, c, t, start_pos + i, cross_kv=cross_kv)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(t.dtype)
+        return (c, nxt), t[:, 0]
+
+    (cache, next_tok), toks = jax.lax.scan(
+        step, (cache, tok), jnp.arange(gen_len, dtype=jnp.int32)
+    )
+    return jnp.moveaxis(toks, 0, 1), next_tok, cache
 
 
 def precompute_cross(params, cfg: ModelConfig, audio):

@@ -273,3 +273,43 @@ class TestAutotune:
             args, interpret=True,
         )
         assert block == tuple(spec.tiling.default)
+
+
+class TestStencilPadding:
+    """pad2d_to_multiple + the Sobel kernel's lifted divisibility assert:
+    arbitrary image sizes pad/unpad through the shared plumbing."""
+
+    def test_pad2d_noop_on_aligned(self):
+        x = jnp.ones((66, 130), jnp.float32)  # (H-2, W-2) = (64, 128)
+        assert dispatch.pad2d_to_multiple(x, (64, 128), halo=2) is x
+
+    def test_pad2d_edge_pads_unaligned(self):
+        x = jnp.arange(12.0).reshape(3, 4)
+        y = dispatch.pad2d_to_multiple(x, (4, 4), halo=2, mode="edge")
+        assert y.shape == (6, 6)
+        np.testing.assert_array_equal(np.asarray(y[:3, :4]), np.asarray(x))
+        np.testing.assert_array_equal(
+            np.asarray(y[3:, :4]), np.broadcast_to(np.asarray(x[-1]), (3, 4))
+        )
+
+    @pytest.mark.parametrize("h,w", [(67, 93), (34, 131), (3, 3)])
+    def test_sobel_kernel_call_arbitrary_size(self, h, w):
+        from repro.kernels.sobel.ref import ref_sobel
+        from repro.kernels.sobel.sobel import sobel_kernel_call
+
+        img = jax.random.uniform(jax.random.key(h * w), (h, w), jnp.float32) * 255
+        out = sobel_kernel_call(img, bh=32, bw=128, interpret=True)
+        assert out.shape == (h - 2, w - 2)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref_sobel(img)), rtol=1e-5, atol=1e-4
+        )
+
+    def test_edge_map_kernel_accepts_arbitrary_size(self):
+        from repro.apps.sobel import edge_map
+
+        img = np.asarray(
+            jax.random.uniform(jax.random.key(5), (45, 61), jnp.float32) * 255
+        )
+        e = edge_map(img, "e2afs", use_kernel=True)
+        assert e.shape == (43, 59)
+        np.testing.assert_allclose(e, edge_map(img, "e2afs"), rtol=1e-5, atol=1e-3)

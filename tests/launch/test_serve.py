@@ -1,0 +1,35 @@
+"""Serve driver: fast path vs loop baseline agreement, timing stats shape,
+and argument validation."""
+import numpy as np
+import pytest
+
+from repro.launch.serve import generate
+
+
+def test_scan_and_loop_modes_token_identical():
+    kw = dict(batch=2, prompt_len=6, gen_len=5, reps=1, verbose=False)
+    toks_loop, stats_loop = generate("qwen3-4b", mode="loop", **kw)
+    toks_scan, stats_scan = generate("qwen3-4b", mode="scan", **kw)
+    np.testing.assert_array_equal(toks_loop, toks_scan)
+    assert toks_scan.shape == (2, 11)
+    for stats in (stats_loop, stats_scan):
+        assert stats["prefill_ms"] > 0
+        assert stats["decode_tok_s"] > 0
+        assert stats["decode_ms_per_token"] > 0
+
+
+def test_quantized_kv_scan_path_runs():
+    toks, stats = generate("qwen3-4b", batch=2, prompt_len=4, gen_len=4,
+                           quantized_kv=True, reps=1, verbose=False)
+    assert toks.shape == (2, 8)
+    assert stats["mode"] == "scan"
+
+
+def test_prompt_len_zero_raises():
+    with pytest.raises(ValueError, match="prompt_len must be >= 1"):
+        generate("qwen3-4b", prompt_len=0, gen_len=2, verbose=False)
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError, match="mode"):
+        generate("qwen3-4b", mode="beam", verbose=False)

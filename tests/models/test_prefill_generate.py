@@ -1,0 +1,240 @@
+"""Serving fast path parity: one-shot prefill vs the teacher-forced
+decode_step loop (logits AND cache contents, float + int8 caches), and
+scan-based greedy decode vs the per-token Python loop (token-exact)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+
+# one representative per cache family: dense GQA (uniform scan stack),
+# local/global hybrid (ring-buffer window caches), SSM state, RG-LRU state
+PARITY_ARCHS = ["qwen3-4b", "gemma3-1b", "mamba2-2.7b", "recurrentgemma-2b"]
+# attention caches are written through identical projections either way ->
+# bit-exact; recurrent prefill states come from the chunked/associative-scan
+# formulations, numerically close to the sequential step but not bitwise
+EXACT_ARCHS = {"qwen3-4b", "gemma3-1b"}
+
+
+def _setup(arch, *, batch=2, prompt_len=8, total=16, quantized=False, seed=0):
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(seed), (batch, prompt_len), 0, cfg.vocab)
+    cache, _ = lm.init_cache(cfg, batch, total, quantized=quantized)
+    return cfg, params, prompt, cache
+
+
+def _loop_prefill(params, cfg, cache, prompt):
+    logits = None
+    for i in range(prompt.shape[1]):
+        logits, cache = lm.decode_step(params, cfg, cache, prompt[:, i : i + 1], jnp.int32(i))
+    return logits, cache
+
+
+def _loop_decode(params, cfg, cache, tok, start, gen_len):
+    out = []
+    for i in range(gen_len):
+        out.append(tok)
+        logits, cache = lm.decode_step(params, cfg, cache, tok, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+    return jnp.concatenate(out, axis=1), cache
+
+
+def _cache_leaves(cache):
+    if isinstance(cache, list):
+        return {f"{i}/{k}": v for i, layer in enumerate(cache) for k, v in layer.items()}
+    return cache
+
+
+def _assert_cache_parity(cache_loop, cache_prefill, *, exact):
+    cl, cp = _cache_leaves(cache_loop), _cache_leaves(cache_prefill)
+    assert cl.keys() == cp.keys()
+    for k in cl:
+        a = np.asarray(cl[k], np.float32)
+        b = np.asarray(cp[k], np.float32)
+        if exact:
+            np.testing.assert_array_equal(a, b, err_msg=k)
+        else:
+            denom = np.abs(a).max() + 1e-6
+            assert np.abs(a - b).max() / denom < 2e-2, k
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_matches_teacher_forced_loop(arch):
+    cfg, params, prompt, cache = _setup(arch)
+    logits_loop, cache_loop = _loop_prefill(params, cfg, cache, prompt)
+    cache2, _ = lm.init_cache(cfg, 2, 16)
+    logits_pre, cache_pre = lm.prefill(params, cfg, cache2, prompt)
+    assert logits_pre.shape == (2, prompt.shape[1], cfg.vocab)
+    exact = arch in EXACT_ARCHS
+    ll = np.asarray(logits_loop[:, -1], np.float32)
+    lp = np.asarray(logits_pre[:, -1], np.float32)
+    if exact:
+        np.testing.assert_array_equal(ll, lp)
+    else:
+        np.testing.assert_allclose(ll, lp, rtol=5e-2, atol=5e-2)
+    _assert_cache_parity(cache_loop, cache_pre, exact=exact)
+
+
+def test_prefill_matches_loop_quantized_kv():
+    """int8 cache: prefill quantizes through the decode write's path, so the
+    quantized values AND per-token scales are bit-identical to the loop's."""
+    cfg, params, prompt, cache = _setup("qwen3-4b", quantized=True)
+    logits_loop, cache_loop = _loop_prefill(params, cfg, cache, prompt)
+    cache2, _ = lm.init_cache(cfg, 2, 16, quantized=True)
+    logits_pre, cache_pre = lm.prefill(params, cfg, cache2, prompt)
+    assert cache_pre["k"].dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(logits_loop[:, -1], np.float32),
+        np.asarray(logits_pre[:, -1], np.float32),
+    )
+    _assert_cache_parity(cache_loop, cache_pre, exact=True)
+
+
+def test_prefill_ring_buffer_longer_prompt_than_window():
+    """Prompt longer than the sliding-window cache: prefill keeps the last
+    cache_len tokens rolled to their decode slots pos % cache_len."""
+    arch = "gemma3-1b"  # smoke window = 8
+    cfg, params, prompt, cache = _setup(arch, prompt_len=12, total=20)
+    logits_loop, cache_loop = _loop_prefill(params, cfg, cache, prompt)
+    cache2, _ = lm.init_cache(cfg, 2, 20)
+    logits_pre, cache_pre = lm.prefill(params, cfg, cache2, prompt)
+    np.testing.assert_array_equal(
+        np.asarray(logits_loop[:, -1], np.float32),
+        np.asarray(logits_pre[:, -1], np.float32),
+    )
+    _assert_cache_parity(cache_loop, cache_pre, exact=True)
+    # decode from both caches stays token-exact
+    tok = jnp.argmax(logits_loop[:, -1:], axis=-1)
+    toks_loop, _ = _loop_decode(params, cfg, cache_loop, tok, 12, 6)
+    toks_scan, _, _ = lm.generate_scan(params, cfg, cache_pre, tok, 12, 6)
+    np.testing.assert_array_equal(np.asarray(toks_loop), np.asarray(toks_scan))
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_generate_scan_token_exact_vs_loop(arch):
+    cfg, params, prompt, cache = _setup(arch)
+    logits, cache = _loop_prefill(params, cfg, cache, prompt)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    gen_len = 6
+    toks_loop, _ = _loop_decode(params, cfg, cache, tok, prompt.shape[1], gen_len)
+
+    cache2, _ = lm.init_cache(cfg, 2, 16)
+    logits2, cache2 = lm.prefill(params, cfg, cache2, prompt)
+    tok2 = jnp.argmax(logits2[:, -1:], axis=-1)
+    toks_scan, next_tok, _ = lm.generate_scan(params, cfg, cache2, tok2, prompt.shape[1], gen_len)
+    assert toks_scan.shape == (2, gen_len)
+    assert next_tok.shape == (2, 1)
+    np.testing.assert_array_equal(np.asarray(toks_loop), np.asarray(toks_scan))
+
+
+def test_generate_scan_continuation_chains():
+    """next_tok lets a second generate_scan continue where the first ended:
+    4 + 4 tokens across two calls equal 8 tokens in one."""
+    cfg, params, prompt, cache = _setup("qwen3-4b")
+    logits, cache = lm.prefill(params, cfg, cache, prompt)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    P = prompt.shape[1]
+    toks8, _, _ = lm.generate_scan(params, cfg, cache, tok, P, 8)
+
+    cache2, _ = lm.init_cache(cfg, 2, 16)
+    logits2, cache2 = lm.prefill(params, cfg, cache2, prompt)
+    tok2 = jnp.argmax(logits2[:, -1:], axis=-1)
+    a, nxt, cache2 = lm.generate_scan(params, cfg, cache2, tok2, P, 4)
+    b, _, _ = lm.generate_scan(params, cfg, cache2, nxt, P + 4, 4)
+    np.testing.assert_array_equal(
+        np.asarray(toks8), np.asarray(jnp.concatenate([a, b], axis=1))
+    )
+
+
+def test_prefill_encdec_with_cross_kv():
+    cfg = get_smoke_config("whisper-small", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    b = 2
+    audio = jax.random.normal(jax.random.key(1), (b, cfg.encoder.n_ctx, cfg.d_model), jnp.bfloat16)
+    cross_kv, _ = lm.precompute_cross(params, cfg, audio)
+    prompt = jax.random.randint(jax.random.key(2), (b, 6), 0, cfg.vocab)
+
+    cache, _ = lm.init_cache(cfg, b, 12)
+    logits_loop = None
+    for i in range(6):
+        logits_loop, cache = lm.decode_step(
+            params, cfg, cache, prompt[:, i : i + 1], jnp.int32(i), cross_kv=cross_kv
+        )
+    cache2, _ = lm.init_cache(cfg, b, 12)
+    logits_pre, cache2 = lm.prefill(params, cfg, cache2, prompt, cross_kv=cross_kv)
+    np.testing.assert_array_equal(
+        np.asarray(logits_loop[:, -1], np.float32),
+        np.asarray(logits_pre[:, -1], np.float32),
+    )
+
+
+def test_attention_prefill_chunked_matches_unchunked():
+    """Query chunking (long-prompt score-memory bound) is bit-exact: softmax
+    is per query row, so the chunk schedule cannot change the math."""
+    from repro.layers import attention as attn
+
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    p = jax.tree.map(lambda a: a[0], params["layers"])["attn"]
+    b, s = 2, 12
+    x = jax.random.normal(jax.random.key(1), (b, s, cfg.d_model), jnp.bfloat16)
+    pos = jnp.arange(s)
+    o1, c1 = attn.attention_prefill(
+        p, cfg, x, attn.init_kv_cache(cfg, b, s, jnp.bfloat16), pos
+    )
+    o2, c2 = attn.attention_prefill(
+        p, cfg, x, attn.init_kv_cache(cfg, b, s, jnp.bfloat16), pos, q_chunk=4
+    )
+    np.testing.assert_array_equal(np.asarray(o1, np.float32), np.asarray(o2, np.float32))
+    np.testing.assert_array_equal(np.asarray(c1["k"], np.float32), np.asarray(c2["k"], np.float32))
+
+
+def test_prefill_last_logit_only_matches_full():
+    cfg, params, prompt, cache = _setup("qwen3-4b")
+    logits_full, _ = lm.prefill(params, cfg, cache, prompt)
+    cache2, _ = lm.init_cache(cfg, 2, 16)
+    logits_last, _ = lm.prefill(params, cfg, cache2, prompt, last_logit_only=True)
+    assert logits_last.shape == (2, 1, cfg.vocab)
+    np.testing.assert_array_equal(
+        np.asarray(logits_full[:, -1:], np.float32), np.asarray(logits_last, np.float32)
+    )
+
+
+def test_prefill_rejects_empty_prompt():
+    cfg, params, _, cache = _setup("qwen3-4b")
+    empty = jnp.zeros((2, 0), jnp.int32)
+    with pytest.raises(ValueError, match="at least one prompt token"):
+        lm.prefill(params, cfg, cache, empty)
+
+
+def test_prefill_rejects_prompt_longer_than_global_cache():
+    """Only ring buffers (window layers) may be shorter than the prompt;
+    a too-small global cache fails loudly instead of silently wrapping."""
+    cfg, params, prompt, _ = _setup("qwen3-4b")
+    small, _ = lm.init_cache(cfg, 2, prompt.shape[1] - 2)
+    with pytest.raises(ValueError, match="does not fit a non-ring cache"):
+        lm.prefill(params, cfg, small, prompt)
+
+
+def test_prefill_ssd_non_multiple_of_chunk_prompt():
+    """SSD chunking falls back to a divisor chunk, so prompts > 128 that
+    are not a 128-multiple still prefill (parity vs the jitted step loop)."""
+    cfg = get_smoke_config("mamba2-2.7b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    P = 130
+    prompt = jax.random.randint(jax.random.key(3), (1, P), 0, cfg.vocab)
+    cache, _ = lm.init_cache(cfg, 1, P + 2)
+    step = jax.jit(lambda c, t, i: lm.decode_step(params, cfg, c, t, i))
+    logits = None
+    for i in range(P):
+        logits, cache = step(cache, prompt[:, i : i + 1], jnp.int32(i))
+    cache2, _ = lm.init_cache(cfg, 1, P + 2)
+    logits_pre, _ = lm.prefill(params, cfg, cache2, prompt)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(logits_pre[:, -1], np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
