@@ -20,15 +20,22 @@ def md_table(headers, rows) -> str:
     return "\n".join(out)
 
 
-def time_call(fn, *args, reps=3, **kw):
-    fn(*args, **kw)  # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args, **kw)
+def _block(out):
     try:
         import jax
 
         jax.block_until_ready(out)
     except Exception:
         pass
+
+
+def time_call(fn, *args, reps=3, **kw):
+    # block the WARMUP result too: async dispatch would otherwise let
+    # compile/transfer work leak into the first timed rep
+    _block(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        # block each rep, not just the last — otherwise reps only measure
+        # dispatch and the final block absorbs all the device time at once
+        _block(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps * 1e6  # us

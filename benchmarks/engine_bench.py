@@ -1,0 +1,150 @@
+"""Continuous-batching engine vs the static lock-step baseline.
+
+Replays a Poisson arrival trace of mixed-length requests (prompt lengths and
+generation budgets drawn from small bucket sets — bounded compile count)
+through ``launch.engine.Engine`` (slot-scheduled decode, admission into freed
+slots mid-decode) and through ``run_static_baseline`` (the PR-3 lock-step
+scheduler: arrival-order groups, padded prompts, group-max decode length).
+Records aggregate useful tok/s and p50/p99 per-request latency for both to
+``experiments/results/engine_bench.json``.
+
+A subset of engine outputs is checked token-exact against solo
+``prefill`` + ``generate_scan`` runs — the bench doubles as an end-to-end
+slot-parity check (greedy, non-MoE archs only) and raises on divergence.
+
+Shape knobs for CI smokes:
+    REPRO_ENGINE_BENCH_ARCH      (default qwen3-4b)
+    REPRO_ENGINE_BENCH_SLOTS    (default 4)
+    REPRO_ENGINE_BENCH_REQUESTS (default 32)
+    REPRO_ENGINE_BENCH_RATE_MS  (default 1.0, mean Poisson inter-arrival)
+    REPRO_ENGINE_BENCH_CHUNK    (default 8, decode steps per admission point)
+    REPRO_ENGINE_BENCH_PROMPTS  (default "4,8,12", prompt-length buckets)
+    REPRO_ENGINE_BENCH_GENS     (default "4,16,96", generation budgets)
+    REPRO_ENGINE_BENCH_SEED     (default 0)
+    REPRO_ENGINE_BENCH_REPS     (default 3, best-of replays per scheduler)
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import md_table, save
+from repro.configs import get_smoke_config
+from repro.launch.engine import Engine, Request, run_static_baseline, solo_generate
+from repro.models import lm
+
+
+def _env_ints(name, default):
+    return tuple(int(v) for v in os.environ.get(name, default).split(","))
+
+
+def _latencies(done):
+    lat = np.asarray([c.latency_s for c in done.values()])
+    return {
+        "p50_latency_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(lat, 99) * 1e3),
+    }
+
+
+def run():
+    arch = os.environ.get("REPRO_ENGINE_BENCH_ARCH", "qwen3-4b")
+    slots = int(os.environ.get("REPRO_ENGINE_BENCH_SLOTS", 4))
+    n_requests = int(os.environ.get("REPRO_ENGINE_BENCH_REQUESTS", 32))
+    rate_ms = float(os.environ.get("REPRO_ENGINE_BENCH_RATE_MS", 1.0))
+    chunk = int(os.environ.get("REPRO_ENGINE_BENCH_CHUNK", 8))
+    prompts = _env_ints("REPRO_ENGINE_BENCH_PROMPTS", "4,8,12")
+    gens = _env_ints("REPRO_ENGINE_BENCH_GENS", "4,16,96")
+    seed = int(os.environ.get("REPRO_ENGINE_BENCH_SEED", 0))
+    reps = int(os.environ.get("REPRO_ENGINE_BENCH_REPS", 3))
+
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(rate_ms / 1e3, size=n_requests))
+    reqs = [
+        Request(
+            uid=i,
+            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.choice(gens)),
+            arrival_s=float(arrivals[i]),
+        )
+        for i in range(n_requests)
+    ]
+    cache_len = max(prompts) + max(gens) + 1
+
+    # best-of-N replays per scheduler: both replay the same trace; scheduler
+    # noise on a shared machine only ever slows a replay down
+    eng = Engine(params, cfg, num_slots=slots, cache_len=cache_len, chunk=chunk)
+    eng.warmup(prompt_lens=prompts)
+    done_engine = s_engine = None
+    for _ in range(max(1, reps)):
+        eng.reset()
+        done = eng.run(reqs)
+        if s_engine is None or eng.stats["tok_s"] > s_engine["tok_s"]:
+            done_engine, s_engine = done, dict(eng.stats, **_latencies(done))
+
+    done_static = s_static = None
+    warmed: set = set()  # share warm shapes across reps: warm-solve once each
+    for _ in range(max(1, reps)):
+        done, stats = run_static_baseline(
+            params, cfg, reqs, num_slots=slots, warmed=warmed
+        )
+        if s_static is None or stats["tok_s"] > s_static["tok_s"]:
+            done_static, s_static = done, dict(stats, **_latencies(done))
+
+    speedup = s_engine["tok_s"] / max(s_static["tok_s"], 1e-9)
+    rows = [
+        ["static[lock-step]", f"{s_static['tok_s']:.0f}",
+         f"{s_static['p50_latency_ms']:.0f}", f"{s_static['p99_latency_ms']:.0f}"],
+        ["engine[continuous]", f"{s_engine['tok_s']:.0f}",
+         f"{s_engine['p50_latency_ms']:.0f}", f"{s_engine['p99_latency_ms']:.0f}"],
+    ]
+    print(f"\n== Engine bench ({arch}, slots={slots}, n={n_requests}, "
+          f"prompts={prompts}, gens={gens}; informational) ==")
+    print(md_table(["scheduler", "tok/s", "p50 ms", "p99 ms"], rows))
+    print(f"continuous-vs-static aggregate speedup {speedup:.2f}x")
+
+    # slot-parity spot check: longest-gen, shortest-gen and a mid request must
+    # match their solo runs token-for-token (greedy; MoE routing is exempt)
+    token_exact = cfg.moe is None
+    parity_uids = [
+        max(reqs, key=lambda r: r.max_new_tokens).uid,
+        min(reqs, key=lambda r: r.max_new_tokens).uid,
+        reqs[n_requests // 2].uid,
+    ]
+    parity_ok = True
+    if token_exact:
+        for uid in dict.fromkeys(parity_uids):
+            solo = solo_generate(
+                params, cfg, reqs[uid].prompt, reqs[uid].max_new_tokens,
+                cache_len=cache_len,
+            )
+            if not np.array_equal(done_engine[uid].tokens, solo):
+                parity_ok = False
+                break
+
+    payload = {
+        "arch": arch,
+        "num_slots": slots,
+        "n_requests": n_requests,
+        "rate_ms": rate_ms,
+        "chunk": chunk,
+        "prompt_buckets": list(prompts),
+        "gen_buckets": list(gens),
+        "engine": s_engine,
+        "static": s_static,
+        "continuous_vs_static_tok_s_speedup": speedup,
+        "token_exact_vs_solo": bool(token_exact and parity_ok),
+    }
+    save("engine_bench", payload)
+    # after save, so the JSON survives for debugging
+    if token_exact and not parity_ok:
+        raise AssertionError(
+            "continuous-batching engine diverged from solo greedy decode"
+        )
+    return payload

@@ -18,6 +18,7 @@ SUITES = (
     "kernels_bench",    # kernel microbench (informational)
     "kmeans_bench",     # fused vs broadcast K-means iteration (informational)
     "serve_bench",      # prefill + scan decode vs per-token loop (informational)
+    "engine_bench",     # continuous batching vs lock-step static (informational)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 

@@ -39,17 +39,31 @@ class SyntheticLM:
         ranks = np.arange(1, v + 1, dtype=np.float64)
         p = 1.0 / ranks
         self._unigram = p / p.sum()
+        # inverse-cdf table for vectorized unigram draws: one O(v) cumsum at
+        # construction instead of per token inside rng.choice(p=...)
+        self._unigram_cdf = np.cumsum(self._unigram)
 
     def _doc(self, rng: np.random.RandomState, length: int) -> np.ndarray:
+        # all randomness precomputed in 3 vectorized draws (the per-token
+        # rng.choice(p=...) rebuilt its O(v) cdf every call and made batch
+        # materialization the bottleneck at serving/bench scale); the chain
+        # walk itself is sequential (tok feeds the bigram lookup) but is now
+        # pure table lookups.  Still deterministic per rng state, so the
+        # batch-from-(seed, step) contract holds — the pinned-digest test in
+        # tests/substrates guards the exact stream.
         v = self.cfg.vocab
+        uni = np.minimum(
+            np.searchsorted(self._unigram_cdf, rng.random_sample(length + 1)),
+            v - 1,
+        )
+        follow = rng.random_sample(length) < 0.75  # follow planted bigram
+        succ_j = rng.randint(0, 4, size=length)
         out = np.empty(length, dtype=np.int32)
-        tok = int(rng.choice(v, p=self._unigram))
+        tok = int(uni[0])
+        succ = self._succ
         for i in range(length):
             out[i] = tok
-            if rng.rand() < 0.75:  # follow planted bigram
-                tok = int(self._succ[tok, rng.randint(4)])
-            else:
-                tok = int(rng.choice(v, p=self._unigram))
+            tok = int(succ[tok, succ_j[i]]) if follow[i] else int(uni[i + 1])
         # repeated-span structure: copy an earlier span forward
         if length > 32 and rng.rand() < 0.5:
             span = rng.randint(4, length // 4)

@@ -1,0 +1,397 @@
+"""Continuous-batching serving engine: slot-scheduled decode over a KV-cache
+pool with per-request positions and ragged prefill.
+
+The PR-3 fast path is lock-step — every request in a batch shares one prompt
+length, decodes the same ``gen_len`` and finishes together, so mixed-length
+traffic pays padding and idle-slot waste.  This engine breaks the lock step:
+
+* a **slot pool** — one KV cache of ``num_slots`` batch rows, where each row
+  is an independent request with its own position counter (``lm.decode_step``
+  threads the (b,) position vector through RoPE, the ring-buffer write index
+  and the validity mask);
+* a **scheduler** that admits queued requests into freed slots mid-decode:
+  ``lm.prefill_into_slots`` prefills the new prompt into staging rows and
+  lands them in the *live donated* cache with whole-row writes (stale KV from
+  the slot's previous occupant is cleared; positions past the prompt stay
+  masked until the new occupant writes them);
+* **chunked decode** — between admission points the pool advances by jitted
+  ``lm.decode_slots_scan`` segments of ``chunk`` steps whose carry (cache,
+  tok, pos, active, remaining) is donated, so the pool buffers are aliased
+  across the whole serve loop;
+* per-slot EOS / budget early-exit and per-slot PRNG sampling (greedy by
+  default; ``temperature`` / ``top_k`` opt in).
+
+Correctness anchor: a request decoded in a staggered slot emits tokens
+bit-identical to a solo ``prefill`` + ``generate_scan`` run (greedy,
+non-MoE) — the slot-parity suite in tests/models/test_engine_slots.py holds
+every cache family (dense, ring, SSD, RG-LRU; float and int8) to it.
+
+Prompts are prefilled at their exact length.  The scheduler admits one
+request per dispatch (``lm.prefill_into_slots`` itself is batch-k, but a
+fixed admit width of 1 keeps the compile set to one trace per prompt-length
+bucket — draw lengths from a small bucket set, as ``engine_bench`` does, and
+``warmup`` covers them all off the serving clock).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "Request",
+    "Completion",
+    "Engine",
+    "run_static_baseline",
+    "solo_generate",
+]
+
+
+def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
+                  cache_len: int, quantized_kv: bool = False) -> np.ndarray:
+    """The parity reference: one request alone through the PR-3 fast path
+    (prefill + greedy generate_scan).  A staggered engine slot must emit
+    exactly these tokens — the slot-parity tests and ``engine_bench`` all
+    check against this ONE definition of the solo run."""
+    prompt = jnp.asarray(prompt, jnp.int32)
+    if prompt.ndim == 1:
+        prompt = prompt[None]
+    cache, _ = lm.init_cache(cfg, 1, cache_len, quantized=quantized_kv)
+    logits, cache = lm.prefill(params, cfg, cache, prompt, last_logit_only=True)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    toks, _, _ = lm.generate_scan(
+        params, cfg, cache, tok, prompt.shape[1], max_new_tokens
+    )
+    return np.asarray(toks)[0]
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: ``prompt`` (s,) int32 tokens, a generation budget
+    and an arrival offset (seconds from trace start; 0 = already queued)."""
+
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: np.ndarray  # emitted tokens (<= max_new_tokens; ends at EOS)
+    arrival_s: float
+    admitted_s: float
+    finished_s: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+
+class Engine:
+    """Slot-pool scheduler around the jitted admit / decode-chunk steps.
+
+    Typical use::
+
+        eng = Engine(params, cfg, num_slots=4, cache_len=64)
+        eng.warmup(prompt_lens={6, 8})
+        done = eng.run(requests)          # {uid: Completion}
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 4,
+                 cache_len: int = 64, quantized_kv: bool = False,
+                 chunk: int = 8, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+        if num_slots < 1 or cache_len < 2 or chunk < 1:
+            raise ValueError(
+                f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
+                f"(got {num_slots}, {cache_len}, {chunk})"
+            )
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.quantized_kv = quantized_kv
+        self.chunk = chunk
+        self.eos_id = eos_id
+        self._base_key = jax.random.PRNGKey(seed)
+
+        base_key = self._base_key
+
+        def admit_fn(p, cache, tok, pos, active, remaining, keys, prompt,
+                     slots, budgets, uids):
+            """One fused admission step: ragged prefill into the live cache
+            plus all per-slot pool-state updates (first token sampled
+            in-device with the same per-request stream the decode chunks
+            use, position = prompt length, budget, a uid-keyed PRNG
+            stream) — a single dispatch per admission instead of a pile of
+            eager ops."""
+            logits, cache = lm.prefill_into_slots(p, cfg, cache, prompt, slots)
+            new_keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
+            # the prompt's last token sits at position s-1, so its successor
+            # draws from fold_in(key, s-1) — exactly what decode_slots_scan
+            # does for every later token
+            last_pos = jnp.full((prompt.shape[0],), prompt.shape[1] - 1, jnp.int32)
+            first = lm.sample_tokens(
+                logits[:, -1, :].astype(jnp.float32), last_pos, new_keys,
+                temperature, top_k,
+            )
+            tok = tok.at[slots, 0].set(first)
+            pos = pos.at[slots].set(prompt.shape[1])
+            active = active.at[slots].set(True)
+            remaining = remaining.at[slots].set(budgets)
+            keys = keys.at[slots].set(new_keys)
+            return cache, tok, pos, active, remaining, keys
+
+        self._admit_j = jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+        self._decode_j = jax.jit(
+            lambda p, c, tok, pos, act, rem, keys: lm.decode_slots_scan(
+                p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
+                temperature=temperature, top_k=top_k, keys=keys,
+            ),
+            donate_argnums=(1, 2, 3, 4, 5),
+        )
+        self.reset()
+
+    # -- pool state ---------------------------------------------------------
+
+    def reset(self):
+        """Zero the pool: fresh cache, all slots free, queues empty."""
+        b = self.num_slots
+        self._cache, _ = lm.init_cache(
+            self.cfg, b, self.cache_len, quantized=self.quantized_kv
+        )
+        self._tok = jnp.zeros((b, 1), jnp.int32)
+        self._pos = jnp.zeros((b,), jnp.int32)
+        self._active = jnp.zeros((b,), bool)
+        self._remaining = jnp.zeros((b,), jnp.int32)
+        self._keys = jax.random.split(self._base_key, b)
+        self._owner: list[Optional[Request]] = [None] * b
+        self._emitted: list[list[int]] = [[] for _ in range(b)]
+        self._admitted_s = [0.0] * b
+
+    def warmup(self, prompt_lens):
+        """Compile the admit step for each prompt-length bucket plus one
+        decode chunk, off the serving clock, then reset the pool."""
+        for s in sorted(set(int(s) for s in prompt_lens)):
+            dummy = Request(uid=-1, prompt=np.zeros(s, np.int32), max_new_tokens=1)
+            self._admit(dummy, slot=0, now=0.0)
+        self._decode_chunk()
+        self.reset()
+
+    # -- scheduler ----------------------------------------------------------
+
+    def _validate(self, req: Request):
+        s = len(req.prompt)
+        if s < 1 or req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: need >= 1 prompt token and a generation "
+                f"budget >= 1 (got {s}, {req.max_new_tokens})"
+            )
+        if not self.cfg.is_subquadratic and s + req.max_new_tokens > self.cache_len:
+            # a dense (global-attention) cache is NOT a ring: positions past
+            # cache_len would wrap onto the request's own KV and, once
+            # pos >= cache_len, the validity mask treats every line as live —
+            # silently wrong tokens.  (Pure window/SSM stacks wrap by design.)
+            raise ValueError(
+                f"request {req.uid}: prompt ({s}) + budget "
+                f"({req.max_new_tokens}) exceeds the dense cache_len "
+                f"({self.cache_len}); allocate a larger pool"
+            )
+
+    def _admit(self, req: Request, slot: int, now: float):
+        self._validate(req)
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        (self._cache, self._tok, self._pos, self._active, self._remaining,
+         self._keys) = self._admit_j(
+            self.params, self._cache, self._tok, self._pos, self._active,
+            self._remaining, self._keys, prompt,
+            np.asarray([slot], np.int32),
+            np.asarray([req.max_new_tokens], np.int32),
+            # sampling stream keyed by uid, not by slot
+            np.asarray([req.uid & 0x7FFFFFFF], np.int32),
+        )
+        self._owner[slot] = req
+        self._emitted[slot] = []
+        self._admitted_s[slot] = now
+
+    def _decode_chunk(self):
+        (toks, emitted, self._tok, self._pos, self._active, self._remaining,
+         self._cache) = self._decode_j(
+            self.params, self._cache, self._tok, self._pos, self._active,
+            self._remaining, self._keys,
+        )
+        # ONE device->host sync per chunk: tokens, emission mask and liveness
+        # come back together (three separate np.asarray round-trips measurably
+        # dominate the smoke-scale serve loop)
+        return jax.device_get((toks, emitted, self._active))
+
+    def run(self, requests, *, deadline_s: float = 600.0) -> dict:
+        """Serve ``requests`` (admitted no earlier than their ``arrival_s``,
+        measured on the wall clock from call start) until all complete.
+        Returns {uid: Completion} plus aggregate stats under ``self.stats``.
+        """
+        requests = list(requests)
+        for req in requests:
+            # validate the whole trace BEFORE serving starts: a bad request
+            # surfacing mid-trace would abandon every in-flight completion
+            self._validate(req)
+        queue = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        done: dict[int, Completion] = {}
+        t0 = time.perf_counter()
+        decode_chunks = 0
+        while queue or any(o is not None for o in self._owner):
+            now = time.perf_counter() - t0
+            if now > deadline_s:
+                raise TimeoutError(f"engine exceeded deadline ({deadline_s}s)")
+            # admit queued arrivals into free slots
+            for slot in range(self.num_slots):
+                if self._owner[slot] is None and queue and queue[0].arrival_s <= now:
+                    self._admit(queue.popleft(), slot, now)
+            if not any(o is not None for o in self._owner):
+                # pool idle: sleep until the next arrival
+                if queue:
+                    time.sleep(max(0.0, queue[0].arrival_s - now))
+                continue
+            toks, emitted, active = self._decode_chunk()
+            decode_chunks += 1
+            now = time.perf_counter() - t0
+            for slot in range(self.num_slots):
+                req = self._owner[slot]
+                if req is None:
+                    continue
+                self._emitted[slot].extend(toks[slot][emitted[slot]].tolist())
+                if not active[slot]:  # finished: free the slot for reuse
+                    done[req.uid] = Completion(
+                        uid=req.uid,
+                        prompt_len=len(req.prompt),
+                        tokens=np.asarray(self._emitted[slot], np.int32),
+                        arrival_s=req.arrival_s,
+                        admitted_s=self._admitted_s[slot],
+                        finished_s=now,
+                    )
+                    self._owner[slot] = None
+        makespan = time.perf_counter() - t0
+        total_tokens = sum(len(c.tokens) for c in done.values())
+        self.stats = {
+            "makespan_s": makespan,
+            "total_tokens": total_tokens,
+            "tok_s": total_tokens / max(makespan, 1e-9),
+            "decode_chunks": decode_chunks,
+            "n_requests": len(done),
+        }
+        return done
+
+
+# jitted lock-step solvers shared across run_static_baseline calls (keyed by
+# the frozen ModelConfig; jax's own cache then specializes per shape) — a
+# fresh jax.jit per call would re-trace inside the timed region on replays
+_STATIC_PREFILL_JITS: dict = {}
+_STATIC_GEN_JITS: dict = {}
+
+
+def _static_prefill_jit(cfg):
+    if cfg not in _STATIC_PREFILL_JITS:
+        _STATIC_PREFILL_JITS[cfg] = jax.jit(
+            lambda p, c, t: lm.prefill(p, cfg, c, t, last_logit_only=True),
+            donate_argnums=(1,),
+        )
+    return _STATIC_PREFILL_JITS[cfg]
+
+
+def _static_gen_jit(cfg, g_len):
+    key = (cfg, g_len)
+    if key not in _STATIC_GEN_JITS:
+        _STATIC_GEN_JITS[key] = jax.jit(
+            lambda p, c, t, sp: lm.generate_scan(p, cfg, c, t, sp, g_len),
+            donate_argnums=(1, 2),
+        )
+    return _STATIC_GEN_JITS[key]
+
+
+def run_static_baseline(params, cfg: ModelConfig, requests, *,
+                        num_slots: int = 4, quantized_kv: bool = False,
+                        warmed: Optional[set] = None) -> tuple[dict, dict]:
+    """The PR-3 lock-step scheduler as a baseline: requests are served in
+    arrival-order groups of ``num_slots``; each group waits for its last
+    arrival, right-pads every prompt to the group max and decodes the group
+    max ``max_new_tokens`` for every slot — the padding / idle-slot waste
+    continuous batching removes.  Only each request's own ``max_new_tokens``
+    emissions count as useful tokens.  Returns ({uid: Completion}, stats).
+
+    This is a throughput yardstick, not an output-correct server: a request
+    shorter than its group's max prompt decodes from the right-padded
+    prompt, so its ``Completion.tokens`` are the padded continuation and do
+    NOT match a solo run of that request (the engine side does — that is
+    the point of the comparison).
+
+    ``warmed`` (a set) makes the jitted prefill/decode shapes compile off the
+    clock on first sight across calls; the jit wrappers themselves are cached
+    module-wide per config, so replays never re-trace on the clock.
+    """
+    reqs = sorted(requests, key=lambda r: (r.arrival_s, r.uid))
+    groups = [reqs[i : i + num_slots] for i in range(0, len(reqs), num_slots)]
+    done: dict[int, Completion] = {}
+    warmed = warmed if warmed is not None else set()
+    prefill_j = _static_prefill_jit(cfg)
+
+    def solve(group, g_len):
+        b = len(group)
+        s_max = max(len(r.prompt) for r in group)
+        prompts = np.zeros((b, s_max), np.int32)
+        for i, r in enumerate(group):
+            prompts[i, : len(r.prompt)] = r.prompt  # lock-step: pad to batch max
+        cache, _ = lm.init_cache(cfg, b, s_max + g_len, quantized=quantized_kv)
+        cache = jax.block_until_ready(cache)
+        logits, cache = prefill_j(params, cache, jnp.asarray(prompts))
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        toks, _, _ = _static_gen_jit(cfg, g_len)(params, cache, tok, jnp.int32(s_max))
+        return np.asarray(jax.block_until_ready(toks))
+
+    t0 = time.perf_counter()
+    prev_end = 0.0
+    for group in groups:
+        g_len = max(r.max_new_tokens for r in group)
+        shape = (len(group), max(len(r.prompt) for r in group), g_len)
+        if shape not in warmed:  # compile off the clock
+            t_saved = time.perf_counter()
+            solve(group, g_len)
+            warmed.add(shape)
+            t0 += time.perf_counter() - t_saved
+        start = max(prev_end, max(r.arrival_s for r in group))
+        # the batch cannot form before its last member arrives
+        now = time.perf_counter() - t0
+        if now < start:
+            time.sleep(start - now)
+        toks = solve(group, g_len)
+        end = time.perf_counter() - t0
+        prev_end = end
+        for i, r in enumerate(group):
+            done[r.uid] = Completion(
+                uid=r.uid,
+                prompt_len=len(r.prompt),
+                tokens=toks[i, : r.max_new_tokens],
+                arrival_s=r.arrival_s,
+                admitted_s=start,
+                finished_s=end,  # lock-step: the whole group finishes together
+            )
+    makespan = time.perf_counter() - t0
+    total_tokens = sum(len(c.tokens) for c in done.values())
+    stats = {
+        "makespan_s": makespan,
+        "total_tokens": total_tokens,
+        "tok_s": total_tokens / max(makespan, 1e-9),
+        "n_groups": len(groups),
+        "n_requests": len(done),
+    }
+    return done, stats

@@ -243,6 +243,17 @@ def _cache_update(buf, new, slot, layer_idx):
     return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype), start)
 
 
+def _cache_update_slots(buf, new, slots, layer_idx):
+    """Per-slot variant of :func:`_cache_update`: row ``b`` of ``new`` lands
+    at its own time index ``slots[b]`` (a (b,) vector — each batch row is an
+    independent request with its own position counter).  One scatter of b
+    token lines; like the DUS it updates the carried cache in place."""
+    rows = jnp.arange(new.shape[0])
+    if layer_idx is None:
+        return buf.at[rows, slots].set(new.astype(buf.dtype))
+    return buf.at[layer_idx, rows, slots].set(new.astype(buf.dtype))
+
+
 def _cache_read(buf, layer_idx):
     return buf if layer_idx is None else jax.lax.dynamic_index_in_dim(
         buf, layer_idx, 0, keepdims=False
@@ -320,7 +331,8 @@ def _fold_masked_attention(q, k, v, mask, scale, k_scale, v_scale, out_dtype):
     dequantized cache copy), additive fp32 mask, fp32 softmax.
 
     q: (b, sq, h, hd); k/v: (b, t, kv, hd), int8 values pre-cast to
-    ``out_dtype``; mask: (sq, t) additive; scales: (b, t, kv) or None.
+    ``out_dtype``; mask: (sq, t) additive, or (b, sq, t) when validity is
+    per batch row (slot-scheduled decode); scales: (b, t, kv) or None.
     Returns (b, sq, h, hd) — the wo projection stays with the caller.
     """
     g = q.shape[2] // k.shape[2]
@@ -328,7 +340,7 @@ def _fold_masked_attention(q, k, v, mask, scale, k_scale, v_scale, out_dtype):
     if k_scale is not None:
         ks = jnp.repeat(jnp.moveaxis(k_scale, 1, 2), g, axis=1)  # (b, h, t)
         scores = scores * ks[:, :, None, :]
-    scores = scores + mask[None, None]
+    scores = scores + (mask[None, None] if mask.ndim == 2 else mask[:, None])
     w = jax.nn.softmax(scores, axis=-1).astype(out_dtype)
     if v_scale is not None:
         vs = jnp.repeat(jnp.moveaxis(v_scale, 1, 2), g, axis=1)
@@ -394,6 +406,11 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
                      layer_idx=None):
     """Single-token decode. x: (b, 1, d); cache holds ``cache_len`` slots.
 
+    ``pos`` is either a scalar (lock-step batch: every row at the same
+    position) or a (b,) vector (slot-scheduled serving: each batch row is an
+    independent request with its own position counter — RoPE, the ring-buffer
+    write index and the validity mask all follow per row).
+
     For sliding-window layers the cache is a ring buffer of size ``window``.
     With ``layer_idx``, cache tensors carry a leading stacked-layers axis and
     are updated in place (see _cache_update).  Returns (out, new_cache).
@@ -403,8 +420,12 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     t_axis = 1 if layer_idx is None else 2
     cache_len = cache["k"].shape[t_axis]
     quantized = cache["k"].dtype == jnp.int8
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
 
-    kv_pos_q = jnp.asarray([0], jnp.int32) + pos  # rope position of new token
+    # rope position of the new token: (1,) broadcasts over the batch in the
+    # scalar case; (b, 1) rotates each row at its own position
+    kv_pos_q = pos[:, None] if per_slot else jnp.asarray([0], jnp.int32) + pos
     use_rope = cfg.pos == "rope"
     q, k_new, v_new = _project_qkv(
         p, cfg, x, x, kv_pos_q, kv_pos_q, use_rope=use_rope
@@ -413,15 +434,16 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     # ring-buffer slot; for full caches cache_len covers all positions so
     # this is just ``pos``
     slot = jnp.asarray(pos % cache_len, jnp.int32)
+    write = _cache_update_slots if per_slot else _cache_update
     k_scale = v_scale = None
     if quantized:
         kq, ks = _quantize_kv(k_new[:, 0])
         vq, vs = _quantize_kv(v_new[:, 0])
         cache = {
-            "k": _cache_update(cache["k"], kq, slot, layer_idx),
-            "v": _cache_update(cache["v"], vq, slot, layer_idx),
-            "k_scale": _cache_update(cache["k_scale"], ks, slot, layer_idx),
-            "v_scale": _cache_update(cache["v_scale"], vs, slot, layer_idx),
+            "k": write(cache["k"], kq, slot, layer_idx),
+            "v": write(cache["v"], vq, slot, layer_idx),
+            "k_scale": write(cache["k_scale"], ks, slot, layer_idx),
+            "v_scale": write(cache["v_scale"], vs, slot, layer_idx),
         }
         # scales are FOLDED into the scores / attention weights rather than
         # materializing a dequantized cache copy (saves 2 full-cache HBM
@@ -433,20 +455,29 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
         v_scale = _cache_read(cache["v_scale"], layer_idx)
     else:
         cache = {
-            "k": _cache_update(cache["k"], k_new[:, 0], slot, layer_idx),
-            "v": _cache_update(cache["v"], v_new[:, 0], slot, layer_idx),
+            "k": write(cache["k"], k_new[:, 0], slot, layer_idx),
+            "v": write(cache["v"], v_new[:, 0], slot, layer_idx),
         }
         k = _cache_read(cache["k"], layer_idx)
         v = _cache_read(cache["v"], layer_idx)
 
     # mask out unwritten slots: before the ring wraps only slots <= pos hold
     # tokens (treating unwritten zero-K slots as valid leaks exp(0) mass
-    # into early softmaxes); once pos >= cache_len every slot is live
+    # into early softmaxes); once pos >= cache_len every slot is live.
+    # Per-slot pos makes this mask per batch row, which is also what isolates
+    # a reused slot from its previous occupant: a freshly admitted request
+    # only ever attends to cache lines at positions it owns.
     t_idx = jnp.arange(cache_len)
-    valid = t_idx <= pos
-    if window:
-        valid = valid | (pos >= cache_len)
-    mask = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, t) additive
+    if per_slot:
+        valid = t_idx[None, :] <= pos[:, None]  # (b, t)
+        if window:
+            valid = valid | (pos[:, None] >= cache_len)
+        mask = jnp.where(valid, 0.0, NEG_INF)[:, None, :]  # (b, 1, t)
+    else:
+        valid = t_idx <= pos
+        if window:
+            valid = valid | (pos >= cache_len)
+        mask = jnp.where(valid, 0.0, NEG_INF)[None, :]  # (1, t) additive
     out = _fold_masked_attention(
         q, k, v, mask, cfg.d_head**-0.5, k_scale, v_scale, x.dtype
     )

@@ -10,6 +10,11 @@ Entry points:
     prefill(params, cfg, cache, tokens)          -> (logits, cache)
     generate_scan(params, cfg, cache, tok, start_pos, gen_len)
                                        -> (tokens, next_tok, cache)
+    prefill_into_slots(params, cfg, cache, tokens, slots)
+                                       -> (last logits, cache)
+    decode_slots_scan(params, cfg, cache, tok, pos, active, remaining, n)
+                                       -> (toks, emitted, tok, pos,
+                                           active, remaining, cache)
 
 Batch dict keys:
     tokens  (b, s) int32            — text tokens (decoder side)
@@ -41,6 +46,11 @@ __all__ = [
     "decode_step",
     "prefill",
     "generate_scan",
+    "slot_rows_like",
+    "insert_cache_slots",
+    "prefill_into_slots",
+    "decode_slots_scan",
+    "sample_tokens",
     "param_count",
 ]
 
@@ -431,19 +441,23 @@ def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
-    """tokens: (b, 1) int32; pos: scalar int32 position of this token.
+    """tokens: (b, 1) int32; pos: int32 position of this token — a scalar
+    (lock-step batch) or a (b,) vector (slot-scheduled serving, one position
+    counter per batch row; threaded through RoPE / sinusoidal PE, the cache
+    write index and the validity mask — see attention_decode).
 
     Returns (logits (b, 1, vocab), new_cache).
     """
     dt = _act_dtype(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
     x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
     if cfg.pos == "sinusoidal":
-        # absolute sinusoid at ``pos``
+        # absolute sinusoid at ``pos``: (d,) for scalar pos, (b, d) per slot
         d = cfg.d_model
         i = jnp.arange(d // 2, dtype=jnp.float32)
-        ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
-        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])
-        x = x + pe.astype(dt)
+        ang = pos.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2 * i / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + (pe[:, None] if pe.ndim == 2 else pe).astype(dt)
 
     blocks = cfg.blocks
     if cfg.uniform:
@@ -623,6 +637,148 @@ def generate_scan(params, cfg: ModelConfig, cache, tok, start_pos, gen_len: int,
         step, (cache, tok), jnp.arange(gen_len, dtype=jnp.int32)
     )
     return jnp.moveaxis(toks, 0, 1), next_tok, cache
+
+
+# ---------------------------------------------------------------------------
+# Slot-scheduled serving: continuous batching over a KV-cache slot pool
+# ---------------------------------------------------------------------------
+
+
+def _slot_batch_axis(cfg) -> int:
+    """Axis of the batch dim in cache leaves: uniform stacks carry a leading
+    stacked-layers axis, so batch is axis 1; per-layer lists put it at 0."""
+    return 1 if cfg.uniform else 0
+
+
+def slot_rows_like(cfg: ModelConfig, cache, k: int):
+    """A fresh zeroed cache for ``k`` requests, shaped like ``cache`` with the
+    batch axis resized — the staging area a new request prefills into before
+    its rows are landed in the live pool."""
+    ax = _slot_batch_axis(cfg)
+    return jax.tree.map(
+        lambda a: jnp.zeros(a.shape[:ax] + (k,) + a.shape[ax + 1 :], a.dtype), cache
+    )
+
+
+def insert_cache_slots(cfg: ModelConfig, cache, rows, slots):
+    """Land per-request cache rows in the live pool: row ``i`` of every leaf
+    of ``rows`` overwrites batch row ``slots[i]`` of ``cache``.  Whole-row
+    writes, so any stale KV / recurrent state from the slot's previous
+    occupant is cleared wholesale; jit with the live cache donated and the
+    scatter updates it in place without disturbing active slots."""
+    slots = jnp.asarray(slots, jnp.int32)
+    if cfg.uniform:
+        return jax.tree.map(
+            lambda buf, r: buf.at[:, slots].set(r.astype(buf.dtype)), cache, rows
+        )
+    return jax.tree.map(
+        lambda buf, r: buf.at[slots].set(r.astype(buf.dtype)), cache, rows
+    )
+
+
+def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, slots, *,
+                       cross_kv=None):
+    """Admit new requests into a *live* slot pool mid-decode: a batch-k
+    :func:`prefill` into fresh staging rows (identical math and cache layout
+    to a solo prefill — the parity anchor), then one whole-row scatter per
+    cache buffer into ``slots`` of the donated live cache.  Rows the prompt
+    does not reach stay zero and are masked by the per-slot validity mask in
+    ``attention_decode`` until the new occupant writes them.
+
+    tokens: (k, s) int32 prompts (one length bucket per call — group ragged
+    admissions by length so each bucket compiles once); slots: (k,) int32.
+    Returns (last-token logits (k, 1, vocab), new_cache).
+    """
+    k = tokens.shape[0]
+    rows = slot_rows_like(cfg, cache, k)
+    logits, rows = prefill(
+        params, cfg, rows, tokens, cross_kv=cross_kv, last_logit_only=True
+    )
+    return logits, insert_cache_slots(cfg, cache, rows, slots)
+
+
+def sample_tokens(logits, pos, keys, temperature, top_k):
+    """Per-slot next-token choice from (b, v) fp32 logits.  Greedy when
+    ``temperature`` is 0; otherwise each row draws from its own PRNG stream,
+    folded on the row's position so a request's samples depend only on its
+    key and its token index — independent of which slot it landed in or who
+    else shares the batch."""
+    if not temperature:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jnp.sort(lg, axis=-1)[:, -top_k, None]
+        lg = jnp.where(lg >= kth, lg, -jnp.inf)
+
+    def one(lg_row, p, key):
+        return jax.random.categorical(jax.random.fold_in(key, p), lg_row)
+
+    return jax.vmap(one)(lg, pos, keys).astype(jnp.int32)
+
+
+def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
+                      remaining, n_steps: int, *, eos_id=None,
+                      temperature: float = 0.0, top_k: int = 0, keys=None,
+                      cross_kv=None):
+    """Slot-scheduled decode: ``n_steps`` decode_steps under one ``lax.scan``
+    where every batch row is an independent request.
+
+    tok (b, 1) next token each slot will feed; pos (b,) its position; active
+    (b,) bool whether the slot holds a live request; remaining (b,) int32
+    tokens the slot may still emit; keys (b,) PRNG keys, REQUIRED when
+    ``temperature`` > 0 and expected to be request-derived (slot-index keys
+    would tie a request's samples to its slot placement — the Engine passes
+    uid-keyed streams).  Inactive slots re-feed their last token at a
+    frozen position — their logits are discarded, their emissions masked, and
+    row-wise math keeps them from perturbing live slots, so a staggered slot
+    decodes bit-identically to a solo :func:`generate_scan` of the same
+    request (greedy, non-MoE).
+
+    Per step each active slot emits the token it FEEDS (the
+    :func:`generate_scan` convention), advances ``pos``, decrements
+    ``remaining``, and goes inactive once its budget is spent or the token it
+    just emitted is ``eos_id`` (the EOS itself is emitted).  Returns
+    (toks (b, n_steps), emitted (b, n_steps) bool, tok, pos, active,
+    remaining, cache) — every donated operand reappears, so jit with
+    ``donate_argnums`` on (cache, tok, pos, active, remaining) aliases the
+    pool buffers across chunks.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, bool)
+    remaining = jnp.asarray(remaining, jnp.int32)
+    if temperature and keys is None:
+        raise ValueError(
+            "temperature sampling needs per-request PRNG keys (a (b,) keys "
+            "array); slot-index defaults would break replay reproducibility"
+        )
+
+    def step(carry, _):
+        cache, tok, pos, active, remaining = carry
+        logits, cache = decode_step(params, cfg, cache, tok, pos, cross_kv=cross_kv)
+        nxt = sample_tokens(
+            logits[:, -1].astype(jnp.float32), pos, keys, temperature, top_k
+        )
+        fed = tok[:, 0]
+        remaining = remaining - active.astype(jnp.int32)
+        still = active & (remaining > 0)
+        if eos_id is not None:
+            still = still & (fed != eos_id)
+        new_pos = pos + active.astype(jnp.int32)
+        new_tok = jnp.where(active[:, None], nxt[:, None], tok)
+        return (cache, new_tok, new_pos, still, remaining), (fed, active)
+
+    (cache, tok, pos, active, remaining), (toks, emitted) = jax.lax.scan(
+        step, (cache, tok, pos, active, remaining), None, length=n_steps
+    )
+    return (
+        jnp.moveaxis(toks, 0, 1),
+        jnp.moveaxis(emitted, 0, 1),
+        tok,
+        pos,
+        active,
+        remaining,
+        cache,
+    )
 
 
 def precompute_cross(params, cfg: ModelConfig, audio):
