@@ -22,10 +22,30 @@ Shape knobs for CI smokes:
     REPRO_ENGINE_BENCH_GENS     (default "4,16,96", generation budgets)
     REPRO_ENGINE_BENCH_SEED     (default 0)
     REPRO_ENGINE_BENCH_REPS     (default 3, best-of replays per scheduler)
+
+Mesh lane (``--mesh`` or REPRO_ENGINE_BENCH_MESH=1): replays the same trace
+through the engine on a forced-host-device ``(data=2, model=2)`` mesh, in
+both serving shardings — ``exact`` (params replicated, slots sharded over
+the whole mesh; held bit-exact against the 1-device engine) and ``tp``
+(params tensor-parallel over 'model' per serve_rules) — and writes the
+1-device-vs-mesh tok/s + p50/p99 comparison to
+``experiments/results/engine_bench_mesh.json``.  Needs >= 4 devices: run as
+``python -m benchmarks.engine_bench --mesh`` (which forces the host device
+count before jax initializes) or set
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` yourself.
 """
 from __future__ import annotations
 
 import os
+import sys
+
+if __name__ == "__main__" and "--mesh" in sys.argv[1:]:
+    # must precede the first jax import: jax locks the device count at init
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=4 " + flags
+        ).strip()
 
 import jax
 import numpy as np
@@ -48,7 +68,40 @@ def _latencies(done):
     }
 
 
-def run():
+def _run_mesh_lane(params, cfg, reqs, *, slots, cache_len, chunk, prompts,
+                   reps, done_1dev):
+    """1-device vs (data=2, model=2) mesh: same trace, same engine, sharded
+    slot pool.  Returns the per-mode stats plus the exact-mode parity bit."""
+    from repro.distributed.sharding import serve_rules
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(shape=(2, 2))
+    out = {"mesh_shape": {"data": 2, "model": 2}}
+    token_exact = cfg.moe is None
+    for mode, replicate in (("exact", True), ("tp", False)):
+        eng = Engine(
+            params, cfg, num_slots=slots, cache_len=cache_len, chunk=chunk,
+            mesh=mesh, rules=serve_rules(cfg, mesh, replicate_params=replicate),
+        )
+        eng.warmup(prompt_lens=prompts)
+        done = best = None
+        for _ in range(max(1, reps)):
+            eng.reset()
+            d = eng.run(reqs)
+            if best is None or eng.stats["tok_s"] > best["tok_s"]:
+                done, best = d, dict(eng.stats, **_latencies(d))
+        out[f"mesh_{mode}"] = best
+        if mode == "exact" and token_exact:
+            mismatched = [
+                r.uid for r in reqs
+                if not np.array_equal(done[r.uid].tokens, done_1dev[r.uid].tokens)
+            ]
+            out["mesh_exact_token_equal"] = not mismatched
+            out["mesh_exact_mismatched_uids"] = mismatched[:8]
+    return out
+
+
+def run(mesh_lane: bool = False):
     arch = os.environ.get("REPRO_ENGINE_BENCH_ARCH", "qwen3-4b")
     slots = int(os.environ.get("REPRO_ENGINE_BENCH_SLOTS", 4))
     n_requests = int(os.environ.get("REPRO_ENGINE_BENCH_REQUESTS", 32))
@@ -58,6 +111,13 @@ def run():
     gens = _env_ints("REPRO_ENGINE_BENCH_GENS", "4,16,96")
     seed = int(os.environ.get("REPRO_ENGINE_BENCH_SEED", 0))
     reps = int(os.environ.get("REPRO_ENGINE_BENCH_REPS", 3))
+    mesh_lane = mesh_lane or os.environ.get("REPRO_ENGINE_BENCH_MESH", "") == "1"
+    if mesh_lane and jax.device_count() < 4:
+        raise RuntimeError(
+            "mesh lane needs >= 4 devices: run `python -m benchmarks.engine_bench "
+            "--mesh` or set XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+            "before the first jax import"
+        )
 
     cfg = get_smoke_config(arch, sqrt_unit="e2afs")
     params, _ = lm.init(cfg, jax.random.key(0))
@@ -141,10 +201,53 @@ def run():
         "continuous_vs_static_tok_s_speedup": speedup,
         "token_exact_vs_solo": bool(token_exact and parity_ok),
     }
-    save("engine_bench", payload)
+    if mesh_lane:
+        payload.update(
+            _run_mesh_lane(
+                params, cfg, reqs, slots=slots, cache_len=cache_len,
+                chunk=chunk, prompts=prompts, reps=reps, done_1dev=done_engine,
+            )
+        )
+        rows = [
+            [name, f"{st['tok_s']:.0f}", f"{st['p50_latency_ms']:.0f}",
+             f"{st['p99_latency_ms']:.0f}"]
+            for name, st in (
+                ("1-device", s_engine),
+                ("mesh(2,2)[exact]", payload["mesh_exact"]),
+                ("mesh(2,2)[tp]", payload["mesh_tp"]),
+            )
+        ]
+        print(f"\n== Mesh lane ({arch}, {jax.device_count()} host devices; "
+              f"informational) ==")
+        print(md_table(["engine", "tok/s", "p50 ms", "p99 ms"], rows))
+        save("engine_bench_mesh", payload)
+    else:
+        save("engine_bench", payload)
     # after save, so the JSON survives for debugging
     if token_exact and not parity_ok:
         raise AssertionError(
             "continuous-batching engine diverged from solo greedy decode"
         )
+    if mesh_lane and payload.get("mesh_exact_token_equal") is False:
+        raise AssertionError(
+            "exact-mode mesh engine diverged from the 1-device engine on "
+            f"uids {payload['mesh_exact_mismatched_uids']}"
+        )
     return payload
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument(
+        "--mesh", action="store_true",
+        help="also run the (data=2, model=2) sharded-engine lane "
+             "(forces 4 host devices; artifact: engine_bench_mesh.json)",
+    )
+    args = ap.parse_args()
+    run(mesh_lane=args.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,5 +24,5 @@ def run():
     save("table3_hw", {"proxies": t, "paper": PAPER_TABLE3, "raw": {n: cost(n) for n in t}})
     print("\n== Table 3 (hardware proxies, calibrated on the E2AFS row) ==")
     print(table)
-    print("(baseline netlists are reconstructions; see DESIGN.md §5-6)")
+    print("(baseline netlists are reconstructions; see docs/numerics.md)")
     return t

@@ -1,22 +1,31 @@
 """Paper §4.2 application: K-means (K=20) color quantization per sqrt unit.
 
-    PYTHONPATH=src python examples/kmeans_quantization.py
+    PYTHONPATH=src python examples/kmeans_quantization.py [--n 128] [--k 20]
+
+--n/--k shrink the image / cluster count (the CI docs lane runs --n 48
+--k 8 as a smoke pass).
 """
+import argparse
+
 from repro.apps.images import rgb_test_image
 from repro.apps.kmeans import evaluate_units, kmeans_quantize
 from repro.apps.metrics_img import psnr
 
 
 def main():
-    rgb = rgb_test_image("peppers", n=128)
-    res = evaluate_units(rgb, k=20)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=128, help="image side length")
+    ap.add_argument("--k", type=int, default=20, help="cluster count")
+    args = ap.parse_args()
+    rgb = rgb_test_image("peppers", n=args.n)
+    res = evaluate_units(rgb, k=args.k)
     for u, r in res.items():
         print(f"{u:8s} PSNR {r['psnr']:.2f} dB  SSIM {r['ssim']:.4f}")
     gap = abs(res["e2afs"]["psnr"] - res["cwaha8"]["psnr"])
     print(f"\n|e2afs - cwaha8| = {gap:.2f} dB (paper: 'closely aligned')")
 
     # fused route: Lloyd iterations inside the kmeans_assign Pallas kernel
-    quant, _ = kmeans_quantize(rgb, k=20, sqrt_unit="e2afs", fused=True)
+    quant, _ = kmeans_quantize(rgb, k=args.k, sqrt_unit="e2afs", fused=True)
     print(f"fused    PSNR {psnr(rgb.mean(-1), quant.mean(-1)):.2f} dB "
           f"(no (N, K, 3) HBM intermediate)")
 

@@ -1,14 +1,23 @@
 """Paper §4.1 application: Sobel edge detection through each sqrt unit.
 
-    PYTHONPATH=src python examples/sobel_edge_detection.py
+    PYTHONPATH=src python examples/sobel_edge_detection.py [--image barbara]
+
+Default sweeps every test image; --image limits to one (the CI docs lane
+uses this as a smoke pass).
 """
+import argparse
+
 from repro.apps.images import IMAGE_NAMES, test_image
 from repro.apps.sobel import edge_map, evaluate_units
 from repro.apps.metrics_img import psnr, ssim
 
 
 def main():
-    for name in IMAGE_NAMES:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--image", choices=IMAGE_NAMES, default=None,
+                    help="run a single image instead of the full sweep")
+    args = ap.parse_args()
+    for name in (args.image,) if args.image else IMAGE_NAMES:
         img = test_image(name)
         res = evaluate_units(img)
         line = " ".join(

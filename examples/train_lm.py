@@ -5,7 +5,9 @@ the E2AFS unit in every norm + the optimizer, vs the exact baseline.
 
 ~100M config: 12L, d=768, 12H, ff=3072, vocab 8192 (a GPT-2-small-class
 model).  On 1 CPU core a 300-step run takes a while; --steps 60 shows the
-curve shape.  Results land in experiments/results/train_lm_<unit>.json.
+curve shape.  --smoke shrinks to a toy config for the CI docs lane (a few
+seconds; proves the documented command still runs end to end).  Results
+land in experiments/results/train_lm_<unit>.json.
 """
 import argparse
 import json
@@ -23,7 +25,13 @@ from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig, adamw_init
 
 
-def config_100m(sqrt_unit: str) -> ModelConfig:
+def config_100m(sqrt_unit: str, *, smoke: bool = False) -> ModelConfig:
+    if smoke:
+        return ModelConfig(
+            name="lm-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+            d_head=16, d_ff=128, vocab=512, sqrt_unit=sqrt_unit,
+            act_dtype="float32", remat="none",
+        ).validate()
     return ModelConfig(
         name="lm-100m",
         n_layers=12,
@@ -39,8 +47,8 @@ def config_100m(sqrt_unit: str) -> ModelConfig:
     ).validate()
 
 
-def run(sqrt_unit: str, steps: int, seq: int, batch: int):
-    cfg = config_100m(sqrt_unit)
+def run(sqrt_unit: str, steps: int, seq: int, batch: int, *, smoke: bool = False):
+    cfg = config_100m(sqrt_unit, smoke=smoke)
     params, _ = lm.init(cfg, jax.random.key(0))
     n = lm.param_count(params)
     print(f"[{sqrt_unit}] params: {n / 1e6:.1f}M")
@@ -71,12 +79,16 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--exact-too", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy config + short run (CI docs lane)")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps, args.seq, args.batch = min(args.steps, 5), 32, 2
 
-    la = run("e2afs", args.steps, args.seq, args.batch)
+    la = run("e2afs", args.steps, args.seq, args.batch, smoke=args.smoke)
     print(f"\nE2AFS: loss {la[0]:.3f} -> {np.mean(la[-10:]):.3f}")
     if args.exact_too:
-        le = run("exact", args.steps, args.seq, args.batch)
+        le = run("exact", args.steps, args.seq, args.batch, smoke=args.smoke)
         print(f"exact: loss {le[0]:.3f} -> {np.mean(le[-10:]):.3f}")
         print(f"final-loss gap (error tolerance at training level): "
               f"{abs(np.mean(la[-10:]) - np.mean(le[-10:])):.4f}")

@@ -1,7 +1,7 @@
 """mamba2-2.7b [ssm]: 64L, d=2560, attention-free SSD (state-space duality),
 d_state=128, vocab=50280 [arXiv:2405.21060].  d_inner = 2*d_model, head_dim 64.
 
-Arch-applicability note (DESIGN.md §7): the paper's sqrt unit has no
+Arch-applicability note (docs/architecture.md): the paper's sqrt unit has no
 attention-scale site here; it applies through RMSNorm and the optimizer."""
 from repro.models.config import ModelConfig, SSMSpec
 

@@ -1,6 +1,6 @@
 """Assigned input-shape sets and ShapeDtypeStruct stand-ins for the dry-run.
 
-Shape policy (DESIGN.md §7):
+Shape policy (docs/architecture.md):
   * train_4k / prefill_32k: all 10 archs (lower train_step / forward)
   * decode_32k: all 10 (serve_step; whisper uses a synthetic 32k decoder KV)
   * long_500k: sub-quadratic-capable archs only (SSM / hybrid / windowed /

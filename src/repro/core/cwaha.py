@@ -3,7 +3,7 @@
 "Cluster-Wise Approximation for Hardware implementation of Arithmetic
 functions": the mantissa interval is split into k uniform clusters and each
 cluster outputs a constant (a small ROM indexed by the top log2(k) mantissa
-bits, separate tables for even/odd exponent parity).  See DESIGN.md §6 — this
+bits, separate tables for even/odd exponent parity).  See docs/numerics.md — this
 piecewise-constant reading is quantitatively consistent with every reported
 CWAHA number (error roughly halves from k=4 to k=8, the tiny LUT count of
 CWAHA-4, and Fig. 2's visible output "steps").

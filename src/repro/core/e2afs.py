@@ -19,7 +19,7 @@ Hardware mapping (all Qm fixed point, m = mantissa bits):
 The FP16 instantiation is bit-exact against the paper's Table 2 worked
 example (0x785A -> 0 10110 1000100001); see tests/core/test_bitexact.py.
 bf16/fp32 instantiations use the identical datapath with constants quantized
-to their mantissa grid (beyond-paper generalization, DESIGN.md §3).
+to their mantissa grid (beyond-paper generalization, docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -104,7 +104,7 @@ def e2afs_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
 # ---------------------------------------------------------------------------
 # E2AFS-R: reciprocal square root by the same design methodology.
 #
-# Beyond-paper extension (DESIGN.md §3): RMSNorm/QK-norm consume rsqrt, and a
+# Beyond-paper extension (docs/numerics.md): RMSNorm/QK-norm consume rsqrt, and a
 # division is as multiplier-hostile as a multiply, so we derive a direct
 # rsqrt datapath with the paper's recipe — binomial first term, parity trick
 # (2^{-1/2} ~= 0.75 = 1 - 1/4, overestimation error +0.0429 cancelled by the

@@ -1,6 +1,6 @@
 """Reconstructed ESAS baseline (Ratnaparkhi & Rao, DSD 2022 [10]).
 
-The original paper is unavailable offline; per DESIGN.md §6 we reconstruct it
+The original paper is unavailable offline; per docs/numerics.md we reconstruct it
 from its description ("exponent series based approximate square root") as the
 *level-1-only* approximation — the first two binomial-series terms plus the
 parity trick, with no second-level breakpoint compensation:

@@ -1,13 +1,13 @@
 """Analytical unit-gate hardware cost model for the Table 3 left half.
 
-Vivado synthesis is unavailable here (DESIGN.md §5): each design is described
+Vivado synthesis is unavailable here (docs/numerics.md): each design is described
 as a netlist of adders / muxes / ROM bits, costed by a classic unit-gate
 model, then calibrated to the paper's Artix-7 scale with a *single* global
 factor per metric, fit on the **E2AFS row** — the one datapath we reproduce
 bit-exactly from the paper, so its netlist is known, not reconstructed.
 
 Honest-reporting notes (EXPERIMENTS.md carries the full discussion):
-  * Baseline netlists are *our reconstructions* (DESIGN.md §6).  Our ESAS is
+  * Baseline netlists are *our reconstructions* (docs/numerics.md).  Our ESAS is
     level-1-only and therefore *simpler* than the real ESAS — consistent with
     the paper reporting ESAS at 54 LUTs vs E2AFS's 37.  Proxy costs for
     baselines therefore under-estimate the real baselines, which only

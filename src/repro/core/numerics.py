@@ -2,7 +2,7 @@
 
 The E2AFS datapath (and the reconstructed baselines) operate on the raw
 exponent/mantissa fields of a binary float.  The paper targets FP16; the
-framework generalizes the identical datapath to bf16/fp32 (see DESIGN.md §3,
+framework generalizes the identical datapath to bf16/fp32 (see docs/kernels.md,
 "Changed assumptions").  All helpers are jit/vmap-safe pure functions.
 """
 from __future__ import annotations
@@ -94,7 +94,7 @@ def compose(sign, exp, man, fmt: FloatFormat) -> jax.Array:
 
 
 def apply_specials(result, x, sign, exp, man, fmt: FloatFormat, *, ftz: bool = True):
-    """IEEE edge-case policy shared by every approximate unit (DESIGN.md §10).
+    """IEEE edge-case policy shared by every approximate unit (docs/numerics.md).
 
     +0 -> +0, +inf -> +inf, NaN -> NaN, negative -> NaN.  Subnormal inputs are
     flushed to zero when ``ftz`` (hardware-faithful default); otherwise they fall

@@ -15,7 +15,13 @@ from typing import Dict, Optional, Sequence, Tuple, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["axis_rules", "constrain", "logical_to_spec", "current_rules"]
+__all__ = [
+    "axis_rules",
+    "maybe_axis_rules",
+    "constrain",
+    "logical_to_spec",
+    "current_rules",
+]
 
 _state = threading.local()
 
@@ -34,6 +40,21 @@ def axis_rules(mesh: Mesh, rules: Rules):
         yield
     finally:
         _state.ctx = prev
+
+
+def maybe_axis_rules(mesh: Optional[Mesh], rules: Optional[Rules]):
+    """``axis_rules(mesh, rules)`` when a mesh is given, else a no-op context.
+
+    The mesh-optional entry points (``lm.prefill(..., mesh=...)``, the
+    Engine's sharded mode) wrap their traced bodies in this so the same model
+    code serves single-device and mesh-sharded callers: ``constrain`` calls
+    resolve against the ambient rules inside the scope and vanish outside it.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    if rules is None:
+        raise ValueError("maybe_axis_rules: a mesh needs a rule table (rules=None)")
+    return axis_rules(mesh, rules)
 
 
 def logical_to_spec(axes: Sequence[Optional[str]], rules: Rules) -> P:

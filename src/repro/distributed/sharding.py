@@ -1,4 +1,4 @@
-"""Logical-axis -> physical-mesh rule tables (DESIGN.md §8).
+"""Logical-axis -> physical-mesh rule tables (docs/serving.md).
 
 Production mesh axes: ("pod", "data", "model") multi-pod / ("data", "model")
 single-pod.  Parameters and optimizer state are FSDP-sharded over the
@@ -19,7 +19,13 @@ from jax.sharding import Mesh, NamedSharding
 from repro.distributed.constraints import Rules, logical_to_spec
 from repro.models.config import ModelConfig
 
-__all__ = ["train_rules", "serve_rules", "shardings_for", "is_spec_leaf"]
+__all__ = [
+    "train_rules",
+    "serve_rules",
+    "shardings_for",
+    "is_spec_leaf",
+    "serve_pool_shardings",
+]
 
 
 def _fsdp_axes(mesh: Mesh):
@@ -57,7 +63,38 @@ def train_rules(cfg: ModelConfig, mesh: Mesh, *, seq_parallel: bool = False) -> 
     return rules
 
 
-def serve_rules(cfg: ModelConfig, mesh: Mesh, *, seq_shard_kv: bool = False) -> Rules:
+def serve_rules(cfg: ModelConfig, mesh: Mesh, *, seq_shard_kv: bool = False,
+                replicate_params: bool = False) -> Rules:
+    """Serving rule table.
+
+    Default: tensor-parallel — params sharded over 'model' (replicated
+    across DP for latency), KV cache batch-over-data and kv-heads-over-model.
+
+    ``replicate_params=True`` is the *exact* serving mode: params replicate
+    everywhere and the batch (slot) axis claims EVERY mesh axis, so each
+    device owns a contiguous block of slots end-to-end.  No contraction ever
+    crosses a shard boundary, which makes mesh decode bit-exact against a
+    single device (TP's partitioned wo/mlp reductions reassociate the bf16
+    sums — ~1 ulp logit wobble, enough to flip a greedy argmax; see
+    docs/serving.md).  Use it when the model fits one chip and the pool is
+    what needs scaling — the slot-parity acceptance tests run in this mode.
+    """
+    if replicate_params:
+        rules: Rules = {
+            "batch": tuple(mesh.axis_names),
+            "seq": None,
+            "embed": None,
+            "heads": None,
+            "kv_heads": None,
+            "heads_mix": None,
+            "mlp": None,
+            "vocab": None,
+            "layers": None,
+            "expert": None,
+            "kv_seq": None,
+            "kv_dim": None,
+        }
+        return rules
     if "kv" in mesh.axis_names:
         return _serve_rules_kv_mesh(cfg, mesh, seq_shard_kv=seq_shard_kv)
     fsdp = _fsdp_axes(mesh)
@@ -170,6 +207,50 @@ def divisible_spec(spec, shape, mesh: Mesh):
     from jax.sharding import PartitionSpec as P
 
     return P(*parts)
+
+
+def serve_pool_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules, *,
+                         num_slots: int, cache_len: int,
+                         quantized: bool = False):
+    """NamedShardings for the continuous-batching engine's slot-pool state on
+    a serving mesh.
+
+    The KV slot pool follows the :func:`serve_rules` table — batch (the slot
+    axis) sharded over the data-parallel axes, ``kv_heads`` over ``model``
+    where divisible — and the per-slot scheduler vectors ride the same batch
+    sharding so the decode scan needs no resharding collectives at the jit
+    boundary.  Returns a dict::
+
+        {"cache": <tree matching lm.init_cache>,
+         "tok":   (num_slots, 1),
+         "vec":   (num_slots,),          # pos / active / remaining
+         "keys":  (num_slots, 2),        # per-slot PRNG key pool
+         "replicated": scalarlike operands (prompts, slot indices)}
+
+    Indivisible dims (e.g. ``num_slots`` not a multiple of the data axis, or
+    1-row admission staging) degrade to replication per-dim, matching
+    :func:`shardings_for`.
+    """
+    from repro.models import lm
+
+    cache_abs, cache_specs = lm.init_cache(
+        cfg, num_slots, cache_len, quantized=quantized, abstract=True
+    )
+    cache_sh = shardings_for(cache_specs, mesh, rules, cache_abs)
+
+    def vec_sharding(shape, axes):
+        spec = divisible_spec(logical_to_spec(axes, rules), shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "cache": cache_sh,
+        "tok": vec_sharding((num_slots, 1), ("batch", None)),
+        "vec": vec_sharding((num_slots,), ("batch",)),
+        "keys": vec_sharding((num_slots, 2), ("batch", None)),
+        "replicated": NamedSharding(mesh, P()),
+    }
 
 
 def shardings_for(spec_tree, mesh: Mesh, rules: Rules, shapes=None):

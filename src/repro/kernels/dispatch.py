@@ -132,11 +132,17 @@ _REGISTRY: dict = {}
 
 
 def register(spec: KernelSpec) -> KernelSpec:
+    """Add a kernel to the dispatch registry (called by each ops module at
+    import; returns the spec so wrappers can keep a module-level handle)."""
     _REGISTRY[spec.name] = spec
     return spec
 
 
 def get(name: str) -> KernelSpec:
+    """Look up a registered KernelSpec by name, importing the kernel's ops
+    module on first touch (so `dispatch("rmsnorm", ...)` works without the
+    caller importing repro.kernels.rmsnorm).  Raises ValueError with the
+    known-kernel list for typos."""
     if name not in _REGISTRY:
         mod = _OPS_MODULE.get(name)
         if mod is not None:

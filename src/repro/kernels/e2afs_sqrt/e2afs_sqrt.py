@@ -1,6 +1,6 @@
 """Pallas TPU kernel: elementwise E2AFS approximate sqrt / rsqrt.
 
-TPU mapping of the paper's FPGA datapath (DESIGN.md §3): the whole
+TPU mapping of the paper's FPGA datapath (docs/kernels.md): the whole
 computation is VPU integer work — bitcast, shifts, masks, adds and two
 branchless selects — with no transcendental-unit involvement and no fp
 multiply on the sqrt path.  Tiles are (block_rows, 128): the last dim

@@ -1,6 +1,6 @@
 """Pallas TPU kernel: RMSNorm fused with the E2AFS-R integer rsqrt.
 
-The fusion story on TPU (DESIGN.md §3): the energy win of the paper's unit
+The fusion story on TPU (docs/kernels.md): the energy win of the paper's unit
 translates to (a) no transcendental rsqrt op, (b) the norm reads x once from
 HBM and writes once — the mean-square reduce, the integer rsqrt datapath and
 the scale multiply all happen in VMEM/VREGs in one pass.

@@ -16,6 +16,11 @@ __all__ = ["attribute"]
 
 
 def attribute(hlo_text: str, top: int = 20):
+    """Rank the ``top`` HLO instructions by HBM bytes and by flops
+    (trip-count aware, like :func:`repro.launch.hlo_cost.analyze_hlo`).
+    Returns ``(top_bytes, top_flops)`` lists of ``(value, instruction)``
+    records — what ``dryrun.py --attribute N`` stores so a regression in a
+    cell's roofline can be blamed on a specific op."""
     comps = hc._parse_module(hlo_text)
     byte_recs: List[Tuple[float, str]] = []
     flop_recs: List[Tuple[float, str]] = []

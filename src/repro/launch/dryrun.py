@@ -271,6 +271,9 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, *, quantized_kv=None,
 
 
 def main():
+    """CLI over :func:`lower_cell`: lower one (arch, shape, mesh) cell or
+    ``--all``, writing one JSON record per cell to ``--out`` (cached by
+    tag; delete the file to re-lower).  ``--smoke`` shrinks to CI scale."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=LM_ARCHS)
     ap.add_argument("--shape", choices=tuple(SHAPES))

@@ -34,6 +34,7 @@ bucket — draw lengths from a small bucket set, as ``engine_bench`` does, and
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -43,6 +44,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.constraints import axis_rules
+from repro.distributed.sharding import (
+    serve_pool_shardings,
+    serve_rules,
+    shardings_for,
+)
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -86,6 +93,10 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """A finished request: its emitted tokens plus the serving timeline
+    (arrival → admission into a slot → finish, seconds from trace start).
+    ``Engine.run`` / ``run_static_baseline`` return ``{uid: Completion}``."""
+
     uid: int
     prompt_len: int
     tokens: np.ndarray  # emitted tokens (<= max_new_tokens; ends at EOS)
@@ -95,6 +106,7 @@ class Completion:
 
     @property
     def latency_s(self) -> float:
+        """End-to-end request latency: arrival to final token, seconds."""
         return self.finished_s - self.arrival_s
 
 
@@ -106,12 +118,26 @@ class Engine:
         eng = Engine(params, cfg, num_slots=4, cache_len=64)
         eng.warmup(prompt_lens={6, 8})
         done = eng.run(requests)          # {uid: Completion}
+
+    ``mesh=`` runs the same scheduler on a device mesh (``rules=`` defaults
+    to ``serve_rules(cfg, mesh)``): params TP-sharded over 'model'
+    (replicated across 'data' — the serving-latency policy), the KV slot
+    pool sharded batch-over-'data' and kv-heads-over-'model', the per-slot
+    scheduler vectors riding the batch sharding.  The jitted admit /
+    decode-chunk steps carry explicit in/out shardings so admissions
+    scatter into the sharded pool and a decode chunk stays ONE dispatch —
+    no host round-trips per slot — with donation aliasing preserved across
+    shards.  With ``serve_rules(..., replicate_params=True)`` tokens are
+    bit-exact against the unsharded engine (greedy, non-MoE); under TP they
+    agree to bf16-reassociation tolerance — docs/serving.md §Sharded
+    serving and tests/launch/test_engine_mesh.py.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 4,
                  cache_len: int = 64, quantized_kv: bool = False,
                  chunk: int = 8, eos_id: Optional[int] = None,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 mesh=None, rules=None):
         if num_slots < 1 or cache_len < 2 or chunk < 1:
             raise ValueError(
                 f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
@@ -126,6 +152,24 @@ class Engine:
         self.eos_id = eos_id
         self._base_key = jax.random.PRNGKey(seed)
 
+        self.mesh = mesh
+        self.rules = rules if rules is not None else (
+            serve_rules(cfg, mesh) if mesh is not None else None
+        )
+        if mesh is not None:
+            # one abstract init for the param logical axes; the concrete
+            # params are then committed to the mesh once, up front
+            _, specs = lm.init(cfg, jax.random.PRNGKey(0), abstract=True)
+            self._param_sh = shardings_for(specs, mesh, self.rules, params)
+            self.params = jax.device_put(params, self._param_sh)
+            self._pool_sh = serve_pool_shardings(
+                cfg, mesh, self.rules, num_slots=num_slots,
+                cache_len=cache_len, quantized=quantized_kv,
+            )
+            rules_ctx = lambda: axis_rules(mesh, self.rules)  # noqa: E731
+        else:
+            rules_ctx = contextlib.nullcontext
+
         base_key = self._base_key
 
         def admit_fn(p, cache, tok, pos, active, remaining, keys, prompt,
@@ -136,37 +180,66 @@ class Engine:
             use, position = prompt length, budget, a uid-keyed PRNG
             stream) — a single dispatch per admission instead of a pile of
             eager ops."""
-            logits, cache = lm.prefill_into_slots(p, cfg, cache, prompt, slots)
-            new_keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
-            # the prompt's last token sits at position s-1, so its successor
-            # draws from fold_in(key, s-1) — exactly what decode_slots_scan
-            # does for every later token
-            last_pos = jnp.full((prompt.shape[0],), prompt.shape[1] - 1, jnp.int32)
-            first = lm.sample_tokens(
-                logits[:, -1, :].astype(jnp.float32), last_pos, new_keys,
-                temperature, top_k,
-            )
-            tok = tok.at[slots, 0].set(first)
-            pos = pos.at[slots].set(prompt.shape[1])
-            active = active.at[slots].set(True)
-            remaining = remaining.at[slots].set(budgets)
-            keys = keys.at[slots].set(new_keys)
-            return cache, tok, pos, active, remaining, keys
+            with rules_ctx():
+                logits, cache = lm.prefill_into_slots(p, cfg, cache, prompt, slots)
+                new_keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
+                # the prompt's last token sits at position s-1, so its
+                # successor draws from fold_in(key, s-1) — exactly what
+                # decode_slots_scan does for every later token
+                last_pos = jnp.full((prompt.shape[0],), prompt.shape[1] - 1, jnp.int32)
+                first = lm.sample_tokens(
+                    logits[:, -1, :].astype(jnp.float32), last_pos, new_keys,
+                    temperature, top_k,
+                )
+                tok = tok.at[slots, 0].set(first)
+                pos = pos.at[slots].set(prompt.shape[1])
+                active = active.at[slots].set(True)
+                remaining = remaining.at[slots].set(budgets)
+                keys = keys.at[slots].set(new_keys)
+                return cache, tok, pos, active, remaining, keys
 
-        self._admit_j = jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
-        self._decode_j = jax.jit(
-            lambda p, c, tok, pos, act, rem, keys: lm.decode_slots_scan(
-                p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
-                temperature=temperature, top_k=top_k, keys=keys,
-            ),
-            donate_argnums=(1, 2, 3, 4, 5),
-        )
+        def decode_fn(p, c, tok, pos, act, rem, keys):
+            with rules_ctx():
+                return lm.decode_slots_scan(
+                    p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
+                    temperature=temperature, top_k=top_k, keys=keys,
+                )
+
+        if mesh is None:
+            self._admit_j = jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+            self._decode_j = jax.jit(decode_fn, donate_argnums=(1, 2, 3, 4, 5))
+        else:
+            # explicit in/out shardings: the pool state keeps its committed
+            # placement through every donated step (no resharding between
+            # chunks) and scheduler-side host operands stay replicated
+            sh = self._pool_sh
+            pool_in = (sh["cache"], sh["tok"], sh["vec"], sh["vec"], sh["vec"],
+                       sh["keys"])
+            rep = sh["replicated"]
+            self._admit_j = jax.jit(
+                admit_fn,
+                donate_argnums=(1, 2, 3, 4, 5, 6),
+                in_shardings=(self._param_sh, *pool_in, rep, rep, rep, rep),
+                out_shardings=pool_in,
+            )
+            # toks/emitted (b, chunk) follow the slot sharding (batch over
+            # data, time replicated); the carried pool state keeps its
+            # committed placement
+            self._decode_j = jax.jit(
+                decode_fn,
+                donate_argnums=(1, 2, 3, 4, 5),
+                in_shardings=(self._param_sh, *pool_in),
+                out_shardings=(sh["tok"], sh["tok"], sh["tok"], sh["vec"],
+                               sh["vec"], sh["vec"], sh["cache"]),
+            )
         self.reset()
 
     # -- pool state ---------------------------------------------------------
 
     def reset(self):
-        """Zero the pool: fresh cache, all slots free, queues empty."""
+        """Zero the pool: fresh cache, all slots free, queues empty.  In mesh
+        mode the pool state is committed to its serving shardings here, once;
+        the jitted steps' matching in/out shardings keep it there."""
         b = self.num_slots
         self._cache, _ = lm.init_cache(
             self.cfg, b, self.cache_len, quantized=self.quantized_kv
@@ -176,6 +249,14 @@ class Engine:
         self._active = jnp.zeros((b,), bool)
         self._remaining = jnp.zeros((b,), jnp.int32)
         self._keys = jax.random.split(self._base_key, b)
+        if self.mesh is not None:
+            sh = self._pool_sh
+            self._cache = jax.device_put(self._cache, sh["cache"])
+            self._tok = jax.device_put(self._tok, sh["tok"])
+            self._pos = jax.device_put(self._pos, sh["vec"])
+            self._active = jax.device_put(self._active, sh["vec"])
+            self._remaining = jax.device_put(self._remaining, sh["vec"])
+            self._keys = jax.device_put(self._keys, sh["keys"])
         self._owner: list[Optional[Request]] = [None] * b
         self._emitted: list[list[int]] = [[] for _ in range(b)]
         self._admitted_s = [0.0] * b

@@ -94,12 +94,17 @@ class _Computation:
 
 @dataclass
 class HloCost:
+    """Aggregated per-device cost of a compiled HLO module: flops, HBM bytes
+    accessed, and collective traffic broken down by op kind — the roofline
+    inputs the dry-run records (see :func:`analyze_hlo`)."""
+
     flops: float = 0.0
     bytes: float = 0.0
     collective_bytes: float = 0.0
     collectives: Dict[str, dict] = field(default_factory=dict)
 
     def add(self, other: "HloCost", mult: float = 1.0):
+        """Accumulate ``other`` scaled by ``mult`` (loop trip counts)."""
         self.flops += other.flops * mult
         self.bytes += other.bytes * mult
         self.collective_bytes += other.collective_bytes * mult
@@ -346,6 +351,12 @@ def _analyze_comp(name: str, comps: Dict[str, _Computation], memo: Dict[str, Hlo
 
 
 def analyze_hlo(text: str) -> HloCost:
+    """Cost-model a compiled module's HLO text (``compiled.as_text()``).
+
+    Unlike XLA's ``cost_analysis()``, while-loop bodies are multiplied by
+    their trip count (decode scans dominate serving cost, and counting them
+    once underestimates by the generation length).  Returns an
+    :class:`HloCost` for the entry computation."""
     comps = _parse_module(text)
     entry = None
     for line in text.splitlines():

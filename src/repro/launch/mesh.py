@@ -1,34 +1,74 @@
 """Production mesh builders (functions, not module constants — importing this
-module never touches jax device state)."""
+module never touches jax device state).
+
+Device-count note: on CPU hosts jax exposes ONE device unless the process
+set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before the first
+jax import* (jax locks the device count at init).  ``launch/dryrun.py`` does
+this for the 512-chip dry-run; the engine-bench mesh lane and the sharded
+serving tests do it for their small (2, 2) meshes.
+"""
 from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
 
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
+_FORCE_FLAG = "XLA_FLAGS=--xla_force_host_platform_device_count"
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods x 256
-    = 512 chips (pod, data, model)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+
+def make_production_mesh(
+    *,
+    multi_pod: bool = False,
+    shape: Optional[Tuple[int, ...]] = None,
+    axes: Optional[Sequence[str]] = None,
+):
+    """Build the serving/training device mesh.
+
+    Defaults are the production topologies — single pod ``(data=16,
+    model=16)`` = 256 chips, or ``multi_pod`` ``(pod=2, data=16, model=16)``
+    = 512 chips.  ``shape=`` overrides the topology (e.g. ``shape=(2, 2)``
+    for the bench/test mesh lane on 4 forced host devices) while keeping the
+    standard axis names; pass ``axes=`` only when the override needs
+    different names (len(axes) must equal len(shape)).
+
+    Raises a RuntimeError naming the env var to set when the process does
+    not expose enough devices.
+    """
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    if axes is None:
+        axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} must match shape {shape} rank")
     n = 1
     for s in shape:
         n *= s
     devices = jax.devices()[:n]
     if len(devices) < n:
         raise RuntimeError(
-            f"mesh {shape} needs {n} devices, have {len(devices)} — the dry-run "
-            "entry point must set XLA_FLAGS=--xla_force_host_platform_device_count "
-            "before importing jax"
+            f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} — set "
+            f"{_FORCE_FLAG}={n} in the environment BEFORE the first jax import "
+            "(jax locks the device count on first init; launch/dryrun.py and "
+            "the engine_bench --mesh lane do this for you)"
         )
     import numpy as np
 
-    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), tuple(axes))
 
 
 def make_mesh_for(shape, axes):
+    """A mesh of the first ``prod(shape)`` visible devices, reshaped to
+    ``shape`` with axis names ``axes`` — the raw builder behind
+    :func:`make_production_mesh`'s override path and the smoke dry-run."""
     import numpy as np
 
     n = int(np.prod(shape))
-    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(devices)} — set "
+            f"{_FORCE_FLAG}={n} before the first jax import"
+        )
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), tuple(axes))

@@ -48,7 +48,7 @@ def decode_loop(decode, params, cache, tok, start, gen_len):
 
 def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
              sqrt_unit="e2afs", quantized_kv=False, seed=0, mode="scan",
-             reps=3, verbose=True):
+             reps=3, verbose=True, mesh=None, rules=None):
     """Prefill a random prompt and greedily decode ``gen_len`` tokens.
 
     mode="scan" (default) is the fast path; mode="loop" the per-token
@@ -57,9 +57,17 @@ def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
     state; ``reps`` timed passes are taken and the best kept (scheduler
     noise only ever slows a pass down).  Returns (tokens (b, prompt+gen),
     stats dict).
+
+    ``mesh=`` runs the scan fast path sharded (docs/serving.md §Sharded
+    serving): params and the KV cache are committed to ``rules`` (default
+    ``serve_rules(cfg, mesh)``; pass
+    ``serve_rules(cfg, mesh, replicate_params=True)`` for the bit-exact
+    mode) and prefill/decode trace inside the rule scope.  Scan mode only.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mesh is not None and mode != "scan":
+        raise ValueError("mesh serving is only wired into mode='scan'")
     if prompt_len < 1:
         raise ValueError(
             f"prompt_len must be >= 1 (got {prompt_len}): prefill needs at "
@@ -73,11 +81,19 @@ def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
     if mode == "scan" and not token_exact and verbose:
         print(f"[serve] note: {arch} is MoE — prefill routing is not "
               f"token-exact vs mode='loop' (capacity is sequence-level)")
-    params, _ = lm.init(cfg, jax.random.key(0))
+    params, specs = lm.init(cfg, jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(seed), (batch, prompt_len), 0, cfg.vocab)
     fresh_cache = functools.partial(
         lm.init_cache, cfg, batch, prompt_len + gen_len, quantized=quantized_kv
     )
+    cache_sh = None
+    if mesh is not None:
+        from repro.distributed.sharding import serve_rules, shardings_for
+
+        rules = rules if rules is not None else serve_rules(cfg, mesh)
+        params = jax.device_put(params, shardings_for(specs, mesh, rules, params))
+        cache_abs, cache_specs = fresh_cache(abstract=True)
+        cache_sh = shardings_for(cache_specs, mesh, rules, cache_abs)
 
     if mode == "loop":
         decode = jax.jit(lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos))
@@ -94,11 +110,13 @@ def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
             return gen, t_pf - t0, t_dec - t_pf
     else:
         prefill_j = jax.jit(
-            lambda p, c, t: lm.prefill(p, cfg, c, t, last_logit_only=True),
+            lambda p, c, t: lm.prefill(p, cfg, c, t, last_logit_only=True,
+                                       mesh=mesh, rules=rules),
             donate_argnums=(1,),
         )
         generate_j = jax.jit(
-            lambda p, c, t, pos: lm.generate_scan(p, cfg, c, t, pos, gen_len),
+            lambda p, c, t, pos: lm.generate_scan(p, cfg, c, t, pos, gen_len,
+                                                  mesh=mesh, rules=rules),
             donate_argnums=(1, 2),
         )
 
@@ -113,12 +131,16 @@ def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
             t_dec = time.perf_counter()
             return gen, t_pf - t0, t_dec - t_pf
 
-    run_once(fresh_cache()[0])  # warmup: compile both steps off the clock
+    def new_cache():
+        c = fresh_cache()[0]
+        return jax.device_put(c, cache_sh) if cache_sh is not None else c
+
+    run_once(new_cache())  # warmup: compile both steps off the clock
     prefill_s, decode_s = float("inf"), float("inf")
     for _ in range(max(1, reps)):
         # a fresh cache per pass (donation consumes it), allocated and
         # settled BEFORE the clock starts so prefill_ms is prefill alone
-        cache = jax.block_until_ready(fresh_cache()[0])
+        cache = jax.block_until_ready(new_cache())
         gen, dt_pf, dt_dec = run_once(cache)
         prefill_s = min(prefill_s, dt_pf)
         decode_s = min(decode_s, dt_dec)
@@ -138,6 +160,8 @@ def generate(arch="qwen3-4b", *, batch=2, prompt_len=8, gen_len=16,
 
 
 def main():
+    """CLI wrapper over :func:`generate`:
+    ``python -m repro.launch.serve [--arch qwen3-4b] [--gen-len N] ...``"""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--batch", type=int, default=2)

@@ -38,6 +38,10 @@ from repro.optim import AdamWConfig, adamw_init, compress_init
 
 def build(arch: str, *, smoke: bool, seq: int, batch: int, sqrt_unit: str,
           microbatches: int, compress: bool, opt_overrides=None):
+    """Assemble one training run: config, initialized params/optimizer, the
+    jitted (donating) train step and a synthetic data source.  Returns
+    ``(cfg, params, opt_state, step_fn, data)`` — the pieces
+    :func:`train_loop` iterates, reusable for custom loops."""
     cfg = (get_smoke_config if smoke else get_config)(arch, sqrt_unit=sqrt_unit)
     params, specs = lm.init(cfg, jax.random.key(0))
     opt_cfg = AdamWConfig(sqrt_unit=sqrt_unit, **(opt_overrides or {}))
@@ -56,6 +60,13 @@ def train_loop(arch="qwen3-4b", *, smoke=True, steps=20, seq=64, batch=4,
                sqrt_unit="e2afs", ckpt_dir=None, ckpt_every=10, microbatches=1,
                compress=False, step_deadline=None, log_every=5,
                inject_straggler_at=None, lr=None, abort_after=None):
+    """Run ``steps`` of training end to end (synthetic LM data), with the
+    approximate sqrt unit live in every norm and the optimizer.  Optional
+    production machinery: periodic async checkpointing to ``ckpt_dir`` with
+    resume-from-latest, a per-step wall-clock ``step_deadline`` (straggler
+    detection; ``inject_straggler_at`` simulates one for tests), gradient
+    compression, and microbatched accumulation.  Returns
+    ``(params, opt_state, losses)``."""
     opt_overrides = {
         "lr": lr if lr is not None else (3e-3 if smoke else 3e-4),
         "warmup_steps": max(2, steps // 10),
@@ -114,6 +125,8 @@ def train_loop(arch="qwen3-4b", *, smoke=True, steps=20, seq=64, batch=4,
 
 
 def main():
+    """CLI wrapper over :func:`train_loop`:
+    ``python -m repro.launch.train [--arch qwen3-4b] [--steps N] ...``"""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--smoke", action="store_true", default=True)

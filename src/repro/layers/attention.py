@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.distributed.constraints import constrain
 from repro.layers.norms import rmsnorm
 from repro.layers.param import DenseInit, zeros
 from repro.layers.rope import apply_rope
@@ -137,7 +138,7 @@ def attention_train(
     kv_pos = kv_positions if kv_positions is not None else jnp.arange(t)
     use_rope = cfg.pos == "rope" and mode != "cross"
     q, k, v = _project_qkv(p, cfg, x, xkv, q_pos, kv_pos, use_rope=use_rope)
-    scale = cfg.d_head**-0.5  # compile-time constant; kept exact (DESIGN.md §4)
+    scale = cfg.d_head**-0.5  # compile-time constant; kept exact (docs/numerics.md)
 
     sdt = jnp.dtype(getattr(cfg, "scores_dtype", "float32"))
     if s <= q_chunk or s % q_chunk != 0:
@@ -365,6 +366,11 @@ def attention_prefill(p, cfg, x, cache, positions, *, window: Optional[int] = No
     b, s, d = x.shape
     use_rope = cfg.pos == "rope"
     q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope=use_rope)
+    # mesh serving (no-ops single-device): heads over 'model', batch over DP —
+    # the cache write below then scatters shard-local rows, no collectives
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
     ring = window is not None
     k_scale = v_scale = None
     if cache["k"].dtype == jnp.int8:
@@ -430,6 +436,12 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     q, k_new, v_new = _project_qkv(
         p, cfg, x, x, kv_pos_q, kv_pos_q, use_rope=use_rope
     )
+    # mesh serving (no-ops single-device): per serve_rules the token line each
+    # row writes is kv-head-sharded like the cache itself, so the per-slot
+    # ring write stays a shard-local scatter
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k_new = constrain(k_new, ("batch", "seq", "kv_heads", None))
+    v_new = constrain(v_new, ("batch", "seq", "kv_heads", None))
 
     # ring-buffer slot; for full caches cache_len covers all positions so
     # this is just ``pos``

@@ -5,7 +5,7 @@ in JAX MoE stacks (T5X/Flaxformer/MaxText): tokens are combined into
 (expert, capacity, d) buffers with one-hot dispatch masks, expert FFNs run as
 a batched einsum over the expert axis, and results are combined back.  The
 expert axis is sharded over the FSDP axes and the per-expert hidden dim over
-'model' (EP x TP, DESIGN.md §8).  Router softmax/top-k stay exact (documented:
+'model' (EP x TP, docs/serving.md).  Router softmax/top-k stay exact (documented:
 routing decisions are control logic, not an error-tolerant arithmetic site).
 """
 from __future__ import annotations

@@ -95,7 +95,7 @@ class ModelConfig:
 
     @property
     def long_context_capable(self) -> bool:
-        """Policy for the long_500k shape (DESIGN.md §7): SSM/hybrid/windowed
+        """Policy for the long_500k shape (docs/architecture.md): SSM/hybrid/windowed
         archs run it; mostly-local archs with sparse global layers also run it
         (bounded global KV count); pure full-attention archs skip."""
         n_global = sum(b == "global" for b in self.blocks)

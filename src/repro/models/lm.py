@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.constraints import constrain
+from repro.distributed.constraints import constrain, maybe_axis_rules
 from repro.layers import attention as attn
 from repro.layers import moe as moe_lib
 from repro.layers import rglru as rglru_lib
@@ -234,6 +234,12 @@ def _stacked_init(init_fn, key, n, *, abstract=False):
 
 
 def init(cfg: ModelConfig, key, *, abstract: bool = False):
+    """Initialize a model from its config.  Returns ``(params, specs)``:
+    ``params`` the parameter pytree (uniform stacks carry a leading
+    'layers' axis for the scanned forward), ``specs`` the matching tree of
+    logical-axis tuples that ``distributed.shardings_for`` maps onto a
+    mesh.  ``abstract=True`` returns ShapeDtypeStructs instead of arrays —
+    free, for deriving shardings or dry-run lowering."""
     cfg.validate()
     ini = DenseInit(key, abstract=abstract)
     vp = cfg.padded_vocab
@@ -441,16 +447,24 @@ def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
-    """tokens: (b, 1) int32; pos: int32 position of this token — a scalar
+    """One decode forward (a single token per batch row) over the cache.
+
+    tokens: (b, 1) int32; pos: int32 position of this token — a scalar
     (lock-step batch) or a (b,) vector (slot-scheduled serving, one position
     counter per batch row; threaded through RoPE / sinusoidal PE, the cache
     write index and the validity mask — see attention_decode).
+
+    Mesh-aware: inside an ``axis_rules(mesh, serve_rules(...))`` scope (the
+    Engine's ``mesh=`` mode, ``lm.prefill(mesh=...)``) the activation /
+    logits constraints below pin the batch axis to the data axes and the
+    vocab axis to 'model'; outside any scope they are no-ops.
 
     Returns (logits (b, 1, vocab), new_cache).
     """
     dt = _act_dtype(cfg)
     pos = jnp.asarray(pos, jnp.int32)
     x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"))
     if cfg.pos == "sinusoidal":
         # absolute sinusoid at ``pos``: (d,) for scalar pos, (b, d) per slot
         d = cfg.d_model
@@ -494,6 +508,7 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
     x = _norm(params, "ln_f", x, cfg)
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
     logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
     return logits[..., : cfg.vocab], new_cache
 
 
@@ -538,7 +553,7 @@ def _layer_prefill(p, cfg, block, x, cache, positions, *, cross_kv=None, layer_i
 
 
 def prefill(params, cfg: ModelConfig, cache, tokens, *, cross_kv=None,
-            last_logit_only: bool = False):
+            last_logit_only: bool = False, mesh=None, rules=None):
     """One-shot batched prefill: a single full-sequence forward over the
     prompt that writes positions [0, s) of every layer's cache, replacing
     the token-at-a-time teacher-forcing loop (s decode_step dispatches and
@@ -557,7 +572,22 @@ def prefill(params, cfg: ModelConfig, cache, tokens, *, cross_kv=None,
     contents; int8 caches quantize through the same path).  MoE layers
     route with a sequence-level expert capacity during prefill, so
     dropped-token behavior may differ from per-token stepping.
+
+    ``mesh=`` (with an optional ``rules=`` table, default
+    ``serve_rules(cfg, mesh)``) traces the forward inside an ``axis_rules``
+    scope so the activation constraints resolve against the mesh — params
+    TP-sharded over 'model', batch and the KV cache's slot axis over the
+    data axes, per docs/serving.md.  Single-device callers omit it and every
+    constraint is a no-op.
     """
+    if mesh is not None:
+        if rules is None:
+            from repro.distributed.sharding import serve_rules
+
+            rules = serve_rules(cfg, mesh)
+        with maybe_axis_rules(mesh, rules):
+            return prefill(params, cfg, cache, tokens, cross_kv=cross_kv,
+                           last_logit_only=last_logit_only)
     b, s = tokens.shape
     if s < 1:
         raise ValueError(
@@ -565,6 +595,7 @@ def prefill(params, cfg: ModelConfig, cache, tokens, *, cross_kv=None,
         )
     dt = _act_dtype(cfg)
     x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"))
     positions = jnp.arange(s)
     if cfg.pos == "sinusoidal":
         x = x + _sinusoidal(s, cfg.d_model).astype(dt)[None]
@@ -607,11 +638,12 @@ def prefill(params, cfg: ModelConfig, cache, tokens, *, cross_kv=None,
     x = _norm(params, "ln_f", x, cfg)
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
     logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
     return logits[..., : cfg.vocab], cache
 
 
 def generate_scan(params, cfg: ModelConfig, cache, tok, start_pos, gen_len: int,
-                  *, cross_kv=None):
+                  *, cross_kv=None, mesh=None, rules=None):
     """Greedy decode as ONE device call: a ``lax.scan`` over ``gen_len``
     decode_steps, replacing the per-token Python dispatch loop.
 
@@ -624,7 +656,18 @@ def generate_scan(params, cfg: ModelConfig, cache, tok, start_pos, gen_len: int,
     with ``donate_argnums`` on the cache and token operands: both reappear
     in the output (cache carry, next_tok), so donation aliases their buffers
     instead of holding a second full-size cache alive across the call.
+
+    ``mesh=`` / ``rules=`` as in :func:`prefill`: trace the scan inside an
+    ``axis_rules`` scope so each decode step's constraints bind to the mesh.
     """
+    if mesh is not None:
+        if rules is None:
+            from repro.distributed.sharding import serve_rules
+
+            rules = serve_rules(cfg, mesh)
+        with maybe_axis_rules(mesh, rules):
+            return generate_scan(params, cfg, cache, tok, start_pos, gen_len,
+                                 cross_kv=cross_kv)
     start_pos = jnp.asarray(start_pos, jnp.int32)
 
     def step(carry, i):
@@ -677,7 +720,7 @@ def insert_cache_slots(cfg: ModelConfig, cache, rows, slots):
 
 
 def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, slots, *,
-                       cross_kv=None):
+                       cross_kv=None, mesh=None, rules=None):
     """Admit new requests into a *live* slot pool mid-decode: a batch-k
     :func:`prefill` into fresh staging rows (identical math and cache layout
     to a solo prefill — the parity anchor), then one whole-row scatter per
@@ -688,7 +731,20 @@ def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, slots, *,
     tokens: (k, s) int32 prompts (one length bucket per call — group ragged
     admissions by length so each bucket compiles once); slots: (k,) int32.
     Returns (last-token logits (k, 1, vocab), new_cache).
+
+    ``mesh=`` / ``rules=`` as in :func:`prefill`: the staging prefill and the
+    whole-row scatter into the (batch-over-data sharded) live pool trace
+    inside an ``axis_rules`` scope, so admission stays one dispatch on a
+    mesh too.
     """
+    if mesh is not None:
+        if rules is None:
+            from repro.distributed.sharding import serve_rules
+
+            rules = serve_rules(cfg, mesh)
+        with maybe_axis_rules(mesh, rules):
+            return prefill_into_slots(params, cfg, cache, tokens, slots,
+                                      cross_kv=cross_kv)
     k = tokens.shape[0]
     rows = slot_rows_like(cfg, cache, k)
     logits, rows = prefill(
@@ -719,7 +775,7 @@ def sample_tokens(logits, pos, keys, temperature, top_k):
 def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
                       remaining, n_steps: int, *, eos_id=None,
                       temperature: float = 0.0, top_k: int = 0, keys=None,
-                      cross_kv=None):
+                      cross_kv=None, mesh=None, rules=None):
     """Slot-scheduled decode: ``n_steps`` decode_steps under one ``lax.scan``
     where every batch row is an independent request.
 
@@ -742,7 +798,23 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
     remaining, cache) — every donated operand reappears, so jit with
     ``donate_argnums`` on (cache, tok, pos, active, remaining) aliases the
     pool buffers across chunks.
+
+    ``mesh=`` / ``rules=`` as in :func:`prefill`: the whole chunk traces
+    inside an ``axis_rules`` scope so each step's constraints bind batch to
+    the data axes and heads/vocab to 'model' — the chunk stays ONE dispatch
+    on the mesh (the scan carries the sharded pool, no per-step host trips).
     """
+    if mesh is not None:
+        if rules is None:
+            from repro.distributed.sharding import serve_rules
+
+            rules = serve_rules(cfg, mesh)
+        with maybe_axis_rules(mesh, rules):
+            return decode_slots_scan(
+                params, cfg, cache, tok, pos, active, remaining, n_steps,
+                eos_id=eos_id, temperature=temperature, top_k=top_k,
+                keys=keys, cross_kv=cross_kv,
+            )
     pos = jnp.asarray(pos, jnp.int32)
     active = jnp.asarray(active, bool)
     remaining = jnp.asarray(remaining, jnp.int32)
@@ -793,6 +865,8 @@ def precompute_cross(params, cfg: ModelConfig, audio):
 
 
 def cross_kv_specs():
+    """Logical-axis specs for :func:`precompute_cross`'s stacked cross-KV
+    tree (feed to ``shardings_for`` alongside the model/cache specs)."""
     return {
         "ck": ("layers", "batch", "kv_seq", "kv_heads", None),
         "cv": ("layers", "batch", "kv_seq", "kv_heads", None),
@@ -800,4 +874,5 @@ def cross_kv_specs():
 
 
 def param_count(params) -> int:
+    """Total parameter count of a params pytree (leaf shapes, host-side)."""
     return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))

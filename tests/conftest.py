@@ -1,0 +1,17 @@
+"""Suite-wide fixtures/environment.
+
+Forces a 4-device host platform BEFORE the first jax import so the sharded
+serving suites (tests/launch/test_engine_mesh.py, tests/distributed/) can
+build real ``(data=2, model=2)`` meshes in-process.  jax locks the device
+count at first init, so this must run at conftest import time — before any
+test module is collected.  Single-device tests are unaffected: unsharded
+jit still places everything on device 0, and the dry-run smoke test strips
+XLA_FLAGS from its subprocess environment anyway.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + _flags
+    ).strip()

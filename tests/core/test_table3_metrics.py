@@ -4,7 +4,7 @@ E2AFS MED/MRED/NMED reproduce the paper to all printed digits.  MSE/EDmax
 deviate slightly; our EDmax (10.98 = 2^7 * (1.5 - sqrt(2))) is the value the
 paper's own stated level-1 error (+0.0858, §2.0.1) implies, so we assert our
 analytic value and record the paper's 9.98 alongside (EXPERIMENTS.md).
-Baselines are reconstructions (DESIGN.md §6): CWAHA rows land within ~5% of
+Baselines are reconstructions (docs/numerics.md): CWAHA rows land within ~5% of
 the paper; ESAS is looser (level-1-only reconstruction) but orderings hold.
 """
 import numpy as np

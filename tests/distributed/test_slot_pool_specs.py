@@ -1,0 +1,91 @@
+"""serve_rules over the KV slot-pool axes, for every cache layout the engine
+can carry (dense GQA, sliding-window ring, SSD state, RG-LRU state; float
+and int8) — each physical mesh axis must be claimed at most once per spec,
+the slot (batch) axis must shard over the data axes, and the cache time axis
+must never shard (the DUS-on-sharded-dim trap, docs/serving.md)."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+from jax.sharding import Mesh
+
+from repro.configs import get_smoke_config
+from repro.distributed.constraints import logical_to_spec
+from repro.distributed.sharding import (
+    is_spec_leaf,
+    serve_pool_shardings,
+    serve_rules,
+)
+from repro.models import lm
+
+# one arch per cache family the slot pool supports
+CACHE_FAMILIES = [
+    ("qwen3-4b", False),          # dense GQA float
+    ("qwen3-4b", True),           # dense GQA int8 (+ scale planes)
+    ("gemma3-1b", False),         # sliding-window ring (window + global mix)
+    ("mamba2-2.7b", False),       # SSD recurrent state
+    ("recurrentgemma-2b", False),  # RG-LRU state + ring window
+]
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    dev = np.asarray([jax.devices()[0]] * int(np.prod(shape))).reshape(shape)
+    return Mesh(dev, axes)
+
+
+def _cache_spec_leaves(cfg, *, quantized):
+    _, specs = lm.init_cache(cfg, 4, 16, quantized=quantized, abstract=True)
+    return jax.tree.leaves(specs, is_leaf=is_spec_leaf)
+
+
+@pytest.mark.parametrize("arch,quantized", CACHE_FAMILIES)
+@pytest.mark.parametrize("replicate_params", [False, True])
+def test_each_physical_axis_claimed_at_most_once(arch, quantized, replicate_params):
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    mesh = _mesh()
+    rules = serve_rules(cfg, mesh, replicate_params=replicate_params)
+    for leaf in _cache_spec_leaves(cfg, quantized=quantized):
+        spec = logical_to_spec(leaf, rules)
+        phys = [
+            a
+            for part in spec
+            if part is not None
+            for a in ((part,) if isinstance(part, str) else part)
+        ]
+        assert len(phys) == len(set(phys)), (leaf, spec)
+
+
+@pytest.mark.parametrize("arch,quantized", CACHE_FAMILIES)
+def test_slot_axis_shards_over_data_and_time_never_shards(arch, quantized):
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    mesh = _mesh()
+    rules = serve_rules(cfg, mesh)
+    assert rules["kv_seq"] is None  # ring writes stay O(token), not O(cache)
+    for leaf in _cache_spec_leaves(cfg, quantized=quantized):
+        spec = logical_to_spec(leaf, rules)
+        for ax_name, part in zip(leaf, spec):
+            if ax_name == "batch":
+                assert part == "data", (leaf, spec)
+            if ax_name == "kv_seq":
+                assert part is None, (leaf, spec)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_serve_pool_shardings_cover_pool_state(quantized):
+    """The engine-facing bundle: cache tree matches init_cache's structure,
+    the scheduler vectors ride the batch sharding, and host-side operands
+    are replicated."""
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    mesh = _mesh()
+    rules = serve_rules(cfg, mesh)
+    sh = serve_pool_shardings(
+        cfg, mesh, rules, num_slots=4, cache_len=16, quantized=quantized
+    )
+    cache_abs, _ = lm.init_cache(cfg, 4, 16, quantized=quantized, abstract=True)
+    assert jax.tree.structure(sh["cache"]) == jax.tree.structure(cache_abs)
+    from jax.sharding import PartitionSpec as P
+
+    assert sh["vec"].spec == P("data")
+    assert sh["tok"].spec == P("data", None)
+    assert sh["keys"].spec == P("data", None)
+    assert sh["replicated"].spec == P()

@@ -1,0 +1,32 @@
+"""Docs integrity under tier-1: every markdown link in README/DESIGN/docs
+resolves (file exists, anchor matches a heading), and the docs tree the
+DESIGN index promises actually exists."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_links  # noqa: E402
+
+
+def test_no_broken_markdown_links():
+    errors = check_links.run(REPO)
+    assert not errors, "\n".join(errors)
+
+
+def test_docs_tree_complete():
+    for name in ("architecture.md", "kernels.md", "serving.md", "numerics.md"):
+        assert (REPO / "docs" / name).exists(), f"docs/{name} missing"
+    index = (REPO / "DESIGN.md").read_text()
+    for name in ("architecture.md", "kernels.md", "serving.md", "numerics.md"):
+        assert f"docs/{name}" in index, f"DESIGN.md index does not link docs/{name}"
+
+
+def test_slug_rules():
+    gs = check_links.github_slug
+    assert gs("Which entry point do I want?") == "which-entry-point-do-i-want"
+    assert gs("Fast path: one-shot prefill + scan decode") == (
+        "fast-path-one-shot-prefill--scan-decode"
+    )
+    assert gs("`serve_rules` and *meshes*") == "serve_rules-and-meshes"

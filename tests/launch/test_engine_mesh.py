@@ -1,0 +1,139 @@
+"""Sharded serving parity: the continuous-batching engine on a real
+``(data=2, model=2)`` host-device mesh (forced by tests/conftest.py).
+
+The contract (docs/serving.md §Sharded serving):
+
+* **exact mode** (``serve_rules(..., replicate_params=True)``) — params
+  replicated, slots sharded over the whole mesh; no contraction crosses a
+  shard boundary, so staggered-slot decode emits tokens BIT-EXACT against
+  the unsharded engine, for the float dense and ring cache families.
+* **tp mode** (default ``serve_rules``) — params tensor-parallel over
+  'model'; the partitioned wo/mlp reductions reassociate the bf16 sums
+  (~1 ulp logit wobble), so the contract is scheduler integrity +
+  tolerance-level agreement, not bitwise tokens.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_smoke_config
+from repro.distributed.sharding import serve_rules
+from repro.launch.engine import Engine, Request
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs 4 host devices (tests/conftest.py forces them; another "
+    "plugin imported jax first if you see this)",
+)
+
+
+def _requests(cfg, n, *, seed=0, prompts=(3, 5), gens=(2, 4, 7)):
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.choice(gens)),
+            arrival_s=float(i) * 1e-3,
+        )
+        for i in range(n)
+    ]
+
+
+def _serve(params, cfg, reqs, *, mesh=None, rules=None, num_slots=2,
+           cache_len=24, chunk=3):
+    eng = Engine(params, cfg, num_slots=num_slots, cache_len=cache_len,
+                 chunk=chunk, mesh=mesh, rules=rules)
+    eng.warmup(prompt_lens={len(r.prompt) for r in reqs})
+    return eng.run(reqs), eng
+
+
+@needs_mesh
+@pytest.mark.parametrize("arch", ["qwen3-4b", "gemma3-1b"])
+def test_exact_mode_bit_exact_vs_unsharded(arch):
+    """Acceptance anchor: staggered-slot decode on the (2,2) mesh in exact
+    mode emits bit-identical tokens to the 1-device engine — dense GQA
+    (qwen3-4b) and sliding-window ring (gemma3-1b) float caches, more
+    requests than slots so slots are reused mid-trace."""
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    reqs = _requests(cfg, 7)
+    done_1dev, _ = _serve(params, cfg, reqs)
+    mesh = make_production_mesh(shape=(2, 2))
+    rules = serve_rules(cfg, mesh, replicate_params=True)
+    done_mesh, eng = _serve(params, cfg, reqs, mesh=mesh, rules=rules)
+    assert set(done_mesh) == {r.uid for r in reqs}
+    for r in reqs:
+        np.testing.assert_array_equal(
+            done_mesh[r.uid].tokens, done_1dev[r.uid].tokens
+        )
+    assert eng.stats["n_requests"] == len(reqs)
+
+
+@needs_mesh
+def test_exact_mode_int8_cache_tolerance_exact():
+    """int8 slot pool on the mesh: quantization is per-token/per-row and the
+    exact-mode compute is shard-local, so the int8 cache path is ALSO
+    token-exact against the unsharded int8 engine (the int8-vs-float
+    tolerance contract lives in test_engine_slots; here the two int8
+    engines must agree with each other)."""
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    reqs = _requests(cfg, 5)
+    kw = dict(num_slots=2, cache_len=24, chunk=3)
+    eng1 = Engine(params, cfg, quantized_kv=True, **kw)
+    eng1.warmup(prompt_lens={3, 5})
+    done1 = eng1.run(reqs)
+    mesh = make_production_mesh(shape=(2, 2))
+    eng2 = Engine(params, cfg, quantized_kv=True, mesh=mesh,
+                  rules=serve_rules(cfg, mesh, replicate_params=True), **kw)
+    eng2.warmup(prompt_lens={3, 5})
+    done2 = eng2.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(done1[r.uid].tokens, done2[r.uid].tokens)
+
+
+@needs_mesh
+def test_tp_mode_serves_trace_with_integrity():
+    """Default (tensor-parallel) rules: every request completes with its full
+    budget and the pool recycles slots; tokens are NOT asserted bitwise
+    (bf16 psum reassociation — see module docstring), but the first decoded
+    token of each request comes from a replicated-unembed argmax over
+    logits that differ from the reference by ~1 ulp, so wholesale
+    divergence would show up as garbage lengths/uids here."""
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    reqs = _requests(cfg, 6)
+    mesh = make_production_mesh(shape=(2, 2))
+    done, eng = _serve(params, cfg, reqs, mesh=mesh,
+                       rules=serve_rules(cfg, mesh))
+    assert set(done) == {r.uid for r in reqs}
+    for r in reqs:
+        c = done[r.uid]
+        assert len(c.tokens) == r.max_new_tokens
+        assert c.tokens.min() >= 0 and c.tokens.max() < cfg.vocab
+    assert eng.stats["tok_s"] > 0
+
+
+@needs_mesh
+def test_mesh_pool_state_stays_committed():
+    """The jitted steps' in/out shardings pin the pool state: after a serve
+    the cache and scheduler vectors still carry their serving sharding (no
+    silent migration back to single-device between chunks)."""
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    mesh = make_production_mesh(shape=(2, 2))
+    rules = serve_rules(cfg, mesh, replicate_params=True)
+    done, eng = _serve(params, cfg, _requests(cfg, 4), mesh=mesh, rules=rules)
+    sh = eng._pool_sh
+    assert eng._pos.sharding == sh["vec"]
+    assert eng._tok.sharding == sh["tok"]
+    leaves = jax.tree.leaves(eng._cache)
+    sh_leaves = jax.tree.leaves(sh["cache"], is_leaf=lambda x: hasattr(x, "spec"))
+    for leaf, want in zip(leaves, sh_leaves):
+        assert leaf.sharding == want

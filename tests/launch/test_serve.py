@@ -33,3 +33,28 @@ def test_prompt_len_zero_raises():
 def test_unknown_mode_raises():
     with pytest.raises(ValueError, match="mode"):
         generate("qwen3-4b", mode="beam", verbose=False)
+
+
+def test_mesh_scan_matches_loop_token_exact():
+    """The sharded fast path (exact serving rules on a (2,2) mesh) emits the
+    same greedy tokens as the single-device per-token loop."""
+    import jax
+
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 host devices (tests/conftest.py forces them)")
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import serve_rules
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(shape=(2, 2))
+    rules = serve_rules(get_smoke_config("qwen3-4b"), mesh, replicate_params=True)
+    kw = dict(batch=2, prompt_len=6, gen_len=5, reps=1, verbose=False)
+    toks_loop, _ = generate("qwen3-4b", mode="loop", **kw)
+    toks_mesh, stats = generate("qwen3-4b", mode="scan", mesh=mesh, rules=rules, **kw)
+    np.testing.assert_array_equal(toks_loop, toks_mesh)
+    assert stats["decode_tok_s"] > 0
+
+
+def test_mesh_rejects_loop_mode():
+    with pytest.raises(ValueError, match="scan"):
+        generate("qwen3-4b", mode="loop", mesh=object(), verbose=False)

@@ -1,0 +1,106 @@
+"""Markdown link checker for the docs lane (stdlib only, offline).
+
+Walks README.md, DESIGN.md and docs/**/*.md, extracts inline links/images
+``[text](target)``, and verifies:
+
+* relative file targets exist (resolved from the linking file's directory);
+* ``#anchor`` fragments — bare or on a relative .md target — match a heading
+  in the target file (GitHub's slug rules: lowercase, punctuation stripped,
+  spaces to hyphens);
+* http(s) targets are left alone (CI stays hermetic) but must be well-formed.
+
+Usage::
+
+    python tools/check_links.py [repo_root]
+
+Exits non-zero listing every broken link.  The docs CI lane runs this plus
+the examples in smoke mode so documented snippets can't rot;
+tests/docs/test_docs.py runs it under tier-1.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md")
+
+
+def md_files(root: Path):
+    for name in DOC_FILES:
+        p = root / name
+        if p.exists():
+            yield p
+    yield from sorted((root / "docs").glob("**/*.md"))
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, lowercase,
+    drop everything but word chars / spaces / hyphens, spaces -> hyphens."""
+    h = re.sub(r"[`*]", "", heading.strip())  # emphasis marks; keep snake_case _
+    h = re.sub(r"[^\w\- ]", "", h.lower())
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    """Heading anchors of a markdown file, skipping fenced code blocks (a
+    '# comment' inside ```bash would otherwise mint a phantom anchor that
+    masks a genuinely broken fragment link)."""
+    anchors = set()
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if m:
+            anchors.add(github_slug(m.group(1)))
+    return anchors
+
+
+def check_file(path: Path, root: Path) -> list:
+    errors = []
+    for m in LINK_RE.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        if base:
+            resolved = (path.parent / base).resolve()
+            if not resolved.exists():
+                errors.append(f"{path.relative_to(root)}: broken link -> {target}")
+                continue
+        else:
+            resolved = path
+        if frag and resolved.suffix == ".md":
+            if github_slug(frag) not in anchors_of(resolved):
+                errors.append(
+                    f"{path.relative_to(root)}: missing anchor -> {target}"
+                )
+    return errors
+
+
+def run(root: Path) -> list:
+    errors = []
+    for f in md_files(root):
+        errors.extend(check_file(f, root))
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 else Path.cwd()
+    errors = run(root)
+    for e in errors:
+        print(f"[broken] {e}")
+    n_files = len(list(md_files(root)))
+    print(f"check_links: {n_files} files, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -61,7 +61,7 @@ def fit_rsqrt():
 
 
 def fit_cwaha(k: int):
-    """CWAHA-k: piecewise-constant cluster table (see DESIGN.md §6)."""
+    """CWAHA-k: piecewise-constant cluster table (see docs/numerics.md)."""
     print(f"# CWAHA-{k} cluster constants (Q10), index = top log2(k) mantissa bits")
     even, odd = [], []
     for i in range(k):
