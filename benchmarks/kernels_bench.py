@@ -1,14 +1,27 @@
 """Kernel micro-benchmarks, driven by the dispatch registry.
 
 Times every registered kernel's Pallas path against its pure-jnp reference
-on the resolved backend (CPU = interpret mode: correctness-side timings
-only; the TPU perf story lives in the roofline/§Perf analysis).  Set
-``REPRO_AUTOTUNE=1`` to sweep the registered tile candidates first — chosen
-blocks are persisted to the tuning cache and reported here.
+and reports the fused-vs-reference ratio per op (ratio < 1: the fused
+kernel wins).  Two lanes:
+
+* interpret (default on CPU): correctness-side timings only — the
+  interpreter's per-element bookkeeping swamps everything, so the JSON is
+  trajectory data (tools/check_bench.py warns, never gates, on it);
+* compiled (``--backend compiled`` or ``REPRO_KERNELS_BENCH_BACKEND``):
+  the real Mosaic path on TPU/GPU; on CPU-only hosts it falls back to the
+  jit floor — interpret-mode Pallas *under jit*, where XLA compiles the
+  kernel's op graph into one fused computation — an honest lower bound the
+  CI perf gate enforces (``"floor": "jit-cpu"`` marks these runs).
+
+Block sizes come from the dispatch layer's roofline prior; set
+``REPRO_AUTOTUNE=1`` to sweep the admissible tile candidates first —
+chosen blocks are persisted to the tuning cache and reported here.
 """
 from __future__ import annotations
 
+import argparse
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +29,8 @@ import jax.numpy as jnp
 from benchmarks.common import md_table, save, time_call
 from repro.core import get_unit
 from repro.kernels import dispatch, tuning
+
+ENV_LANE = "REPRO_KERNELS_BENCH_BACKEND"
 
 
 def _bench_inputs(name):
@@ -39,51 +54,92 @@ def _bench_inputs(name):
         m = jax.random.normal(ks[2], shape, jnp.float32) * 0.1
         v = jnp.abs(jax.random.normal(ks[3], shape, jnp.float32)) * 0.01
         return (p, g, m, v), dict(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, wd=0.1, b1c=0.5, b2c=0.25)
+    if name == "decode_attention":
+        # a serving-shaped step: 8 slots, 512-token dense cache, GQA 16/8
+        b, t, h, kv, hd = 8, 512, 16, 8, 64
+        ks = jax.random.split(k, 3)
+        q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+        kc = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32)
+        vc = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32)
+        pos = jnp.full((b,), t - 1, jnp.int32)
+        return (q, kc, vc, pos), dict(scale=hd**-0.5, wrap=False)
     raise ValueError(name)
 
 
-def run():
-    backend = dispatch.resolve_backend()
-    rows = []
-    payload = {"backend": backend}
+def _resolve_lane(backend):
+    """(requested, lane, interpret, floor): the lane asked for and the
+    backend the kernels actually run on.  Requesting "compiled" on a
+    CPU-only host degrades to the jit floor — interpret-mode Pallas under
+    jit — rather than failing (Mosaic kernels don't compile on CPU)."""
+    requested = backend or os.environ.get(ENV_LANE) or "auto"
+    if requested not in ("auto", "interpret", "compiled"):
+        raise ValueError(f"invalid kernels bench backend {requested!r}")
+    if requested == "compiled":
+        floor = jax.default_backend() == "cpu"
+        return requested, "compiled", floor, floor
+    interpret = (
+        dispatch.resolve_backend() == "interpret" if requested == "auto"
+        else True
+    )
+    return requested, "interpret" if interpret else "compiled", interpret, False
 
-    # sqrt-unit datapaths (pure jnp, jitted) — the historical comparison set
-    x = jnp.abs(jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)) + 0.1
-    for name in ("exact", "e2afs", "esas", "cwaha8"):
-        unit = get_unit(name)
-        us = time_call(jax.jit(unit.sqrt), x)
-        rows.append([f"sqrt[{name}]", f"{us:.0f}"])
-        payload[f"sqrt_{name}"] = us
+
+def run(backend: str | None = None):
+    requested, lane, interpret, floor = _resolve_lane(backend)
+    out_name = "kernels_bench_compiled" if requested == "compiled" else "kernels_bench"
+    rows = []
+    payload = {"backend": lane, "floor": "jit-cpu" if floor else None}
+
+    if out_name == "kernels_bench":
+        # sqrt-unit datapaths (pure jnp, jitted) — the historical comparison set
+        x = jnp.abs(jax.random.normal(jax.random.key(0), (512, 1024), jnp.float32)) + 0.1
+        for name in ("exact", "e2afs", "esas", "cwaha8"):
+            unit = get_unit(name)
+            us = time_call(jax.jit(unit.sqrt), x)
+            rows.append([f"sqrt[{name}]", f"{us:.0f}", "-"])
+            payload[f"sqrt_{name}"] = us
 
     # every registered kernel: pallas (dispatch-resolved) vs reference.  The
-    # block is resolved (cache/sweep/default) up front and the callable jitted
-    # once, so the timing loop pays neither retrace/dispatch overhead nor the
-    # first compile (time_call's warmup call absorbs it).
+    # block is resolved (cache/sweep/roofline prior) up front and the callable
+    # jitted once, so the timing loop pays neither retrace/dispatch overhead
+    # nor the first compile (time_call's warmup call absorbs it).
     tuned = tuning.autotune_enabled()
     for name in dispatch.registered():
         spec = dispatch.get(name)
         args, kw = _bench_inputs(name)
         block = tuning.choose_block(
             name, spec.tiling.candidates, spec.tiling.default,
-            lambda b: dispatch.dispatch(name, *args, block=b, **kw),
-            args, interpret=backend == "interpret", tune=tuned,
+            lambda b: dispatch.dispatch(name, *args, block=b, interpret=interpret, **kw),
+            args, interpret=interpret, tune=tuned, geometry=spec.tiling.geometry,
         )
         # kw is bound via partial (not passed per call) so hyperparameters stay
         # static under jit, as they are inside a real train step
-        fn = jax.jit(functools.partial(dispatch.dispatch, name, block=tuple(block), **kw))
+        fn = jax.jit(functools.partial(
+            dispatch.dispatch, name, block=tuple(block), interpret=interpret, **kw
+        ))
         us_pallas = time_call(fn, *args)
         us_ref = time_call(jax.jit(functools.partial(spec.reference, **kw)), *args)
-        rows.append([f"{name}[pallas-{backend}]", f"{us_pallas:.0f}"])
-        rows.append([f"{name}[ref]", f"{us_ref:.0f}"])
+        ratio = us_pallas / us_ref if us_ref else float("inf")
+        rows.append([f"{name}[pallas-{lane}]", f"{us_pallas:.0f}", f"{ratio:.2f}"])
+        rows.append([f"{name}[ref]", f"{us_ref:.0f}", "-"])
         payload[f"{name}_pallas"] = us_pallas
         payload[f"{name}_ref"] = us_ref
+        payload[f"{name}_ratio"] = ratio
         payload[f"{name}_block"] = list(block)
 
     # back-compat key for trajectory plots — only valid for interpret timings
-    if backend == "interpret":
+    if out_name == "kernels_bench" and interpret:
         payload["rmsnorm_pallas_interpret"] = payload["rmsnorm_pallas"]
 
-    print(f"\n== Kernel microbench (us/call, backend={backend}; informational) ==")
-    print(md_table(["kernel", "us/call"], rows))
-    save("kernels_bench", payload)
+    floor_note = ", jit-cpu floor" if floor else ""
+    print(f"\n== Kernel microbench (us/call, lane={lane}{floor_note}) ==")
+    print(md_table(["kernel", "us/call", "fused/ref"], rows))
+    save(out_name, payload)
     return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("auto", "interpret", "compiled"),
+                    default=None, help="kernel lane (default: env or auto)")
+    run(ap.parse_args().backend)

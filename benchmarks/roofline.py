@@ -12,10 +12,11 @@ import jax
 import numpy as np
 
 from benchmarks.common import md_table, save
+from repro.core.hw_model import TPU_V5E
 
 DRYRUN = Path("experiments/dryrun")
 
-PEAK_FLOPS = 197e12
+PEAK_FLOPS = TPU_V5E.peak_flops  # single source: core/hw_model.py ChipModel
 _PARAMS_CACHE = {}
 
 

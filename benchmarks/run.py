@@ -15,12 +15,19 @@ SUITES = (
     "fig3_fom",         # paper Fig 3, figures of merit
     "table4_sobel",     # paper Table 4, Sobel PSNR/SSIM
     "fig5_kmeans",      # paper Fig 5, K-means color quantization
-    "kernels_bench",    # kernel microbench (informational)
+    "kernels_bench",    # kernel microbench, interpret lane (informational)
+    "kernels_bench_compiled",  # compiled/jit-floor lane (CI perf gate input)
     "kmeans_bench",     # fused vs broadcast K-means iteration (informational)
     "serve_bench",      # prefill + scan decode vs per-token loop (informational)
     "engine_bench",     # continuous batching vs lock-step static (informational)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
+
+# suite name -> (module, run() kwargs) for suites that are a parameterization
+# of another module rather than a module of their own
+ALIASES = {
+    "kernels_bench_compiled": ("kernels_bench", {"backend": "compiled"}),
+}
 
 
 def main() -> None:
@@ -33,8 +40,9 @@ def main() -> None:
     for name in wanted:
         t0 = time.time()
         try:
-            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            mod.run()
+            mod_name, kwargs = ALIASES.get(name, (name, {}))
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(**kwargs)
             print(f"[done] {name} ({time.time() - t0:.1f}s)")
         except Exception as e:  # noqa: BLE001
             print(f"[FAIL] {name}: {type(e).__name__}: {e}")

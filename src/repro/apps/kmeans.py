@@ -70,6 +70,7 @@ def resolve_fused_block(pix, cent):
         "kmeans_assign", spec.tiling.candidates, spec.tiling.default,
         lambda b: dispatch.dispatch("kmeans_assign", pix, cent, block=b),
         (pix, cent), interpret=backend == "interpret",
+        geometry=spec.tiling.geometry,
     )
 
 

@@ -34,7 +34,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Tuple
 
-__all__ = ["Netlist", "NETLISTS", "cost", "calibrated_table", "PAPER_TABLE3"]
+__all__ = [
+    "Netlist",
+    "NETLISTS",
+    "cost",
+    "calibrated_table",
+    "PAPER_TABLE3",
+    "ChipModel",
+    "TPU_V5E",
+    "INTERPRET_CPU",
+    "chip_for_backend",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +113,57 @@ def cost(name: str) -> Dict[str, float]:
     switching += n.rom_bits * _TOGGLE["rom"]
     switching += 6.0  # I/O register floor
     return {"area": area, "depth": depth, "switching": switching}
+
+
+# ---------------------------------------------------------------------------
+# Chip-level roofline constants
+# ---------------------------------------------------------------------------
+#
+# The unit-gate model above prices one datapath; kernel tiling needs the
+# complement — what one *chip* sustains per second and what one grid step
+# costs to launch.  Both the roofline tables (benchmarks/roofline.py,
+# launch/dryrun.py) and the autotune tile priors (kernels/tuning.py) read
+# their constants from here so a recalibration lands everywhere at once.
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipModel:
+    """Per-chip roofline terms for the tile-time prior.
+
+    ``peak_flops`` is the sustained per-element op rate of the tile pipeline
+    (bf16 MXU peak for real TPU; an effective emulation rate for the Pallas
+    interpreter, whose per-element bookkeeping — not HBM — is the bottleneck).
+    ``step_overhead_s`` is the fixed cost of one grid step: ~us-scale kernel
+    dispatch when compiled, ~ms-scale traced fori iteration when interpreted.
+    """
+
+    name: str
+    peak_flops: float  # elementwise op/s the tile pipeline retires
+    hbm_bw: float  # bytes/s
+    vmem_bytes: int  # per-core fast-memory budget a tile must fit in
+    step_overhead_s: float  # fixed cost per grid step
+
+
+TPU_V5E = ChipModel(
+    name="tpu-v5e",
+    peak_flops=197e12,  # bf16 peak; shared with the roofline tables
+    hbm_bw=819e9,
+    vmem_bytes=16 * 2**20,
+    step_overhead_s=2e-6,
+)
+
+INTERPRET_CPU = ChipModel(
+    name="pallas-interpret-cpu",
+    peak_flops=2e9,
+    hbm_bw=2e10,
+    vmem_bytes=256 * 2**20,  # emulated VMEM: host memory, effectively uncapped
+    step_overhead_s=1e-3,
+)
+
+
+def chip_for_backend(interpret: bool) -> ChipModel:
+    """The chip whose roofline terms model the resolved kernel backend."""
+    return INTERPRET_CPU if interpret else TPU_V5E
 
 
 def calibrated_table() -> Dict[str, Dict[str, float]]:

@@ -1,0 +1,76 @@
+"""Public wrapper: fused per-slot decode attention.
+
+Batch rows pad to the tile with zero K/V and position 0 — a padded row's
+softmax sees exactly one valid zero-score slot, so it stays finite and is
+cropped from the returned output; the batch tile is purely a perf knob the
+dispatch layer resolves (roofline prior / autotune).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.kernels.attention.attention import decode_attention_kernel_call
+from repro.kernels.attention.ref import ref_decode_attention
+
+__all__ = ["decode_attention", "ref_decode_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "wrap", "block", "interpret"))
+def _pallas(q, k, v, pos, k_scale=None, v_scale=None, *, block, interpret,
+            scale, wrap=False):
+    b = q.shape[0]
+    bb = min(block[0], b)  # a small pool pads to one tile, not block_b rows
+    pad = (-b) % bb
+    if pad:
+        padb = lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        q, k, v, pos = padb(q), padb(k), padb(v), padb(pos)
+        if k_scale is not None:
+            k_scale, v_scale = padb(k_scale), padb(v_scale)
+    out = decode_attention_kernel_call(
+        q, k, v, pos.astype(jnp.int32)[:, None], k_scale, v_scale,
+        scale=scale, wrap=wrap, block_b=bb, interpret=interpret,
+    )
+    return out[:b]
+
+
+def _geometry(args):
+    """Tile-prior geometry: the grid runs over batch rows, and each row's
+    work is its whole KV stream (read once) plus the q/out token lines."""
+    q, k = args[0], args[1]
+    b = int(q.shape[0])
+    return {
+        "rows": b,
+        "row_elems": (int(q.size) + 2 * int(k.size)) // max(b, 1),
+        "ops_per_elem": 4.0,  # two MAC passes over the KV stream + softmax
+        "streams": 1,  # the KV read dominates; q/out lines are negligible
+    }
+
+
+dispatch.register(
+    dispatch.KernelSpec(
+        name="decode_attention",
+        reference=ref_decode_attention,
+        pallas=_pallas,
+        tiling=dispatch.TilingSpec(
+            default=(8,),
+            candidates=((1,), (2,), (4,), (8,), (16,)),
+            geometry=_geometry,
+        ),
+    )
+)
+
+
+def decode_attention(q, k, v, pos, k_scale=None, v_scale=None, *, scale,
+                     wrap=False, interpret: bool | None = None):
+    """One fused decode-attention step.  q: (b, h, hd) — the single query
+    token per row; k/v: (b, t, kv, hd) cache (int8 values pre-cast to q's
+    dtype); pos: (b,) per-row positions; scales: (b, t, kv) fp32 or None;
+    ``wrap=True`` for ring (sliding-window) caches.  Returns (b, h, hd)."""
+    return dispatch.dispatch(
+        "decode_attention", q, k, v, pos, k_scale, v_scale,
+        scale=scale, wrap=wrap, interpret=interpret,
+    )

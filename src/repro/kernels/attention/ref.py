@@ -1,0 +1,41 @@
+"""Pure-jnp reference for the fused decode-attention kernel.
+
+This is literally the inline decode path: the same per-row validity mask
+``attention_decode`` builds, fed to the same
+:func:`repro.layers.attention._fold_masked_attention` scored-attention
+block.  The kernel's parity tests (and the dispatch 'reference' backend)
+compare against this, so a contract change in the layer propagates to the
+kernel oracle automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention import NEG_INF, _fold_masked_attention
+
+__all__ = ["ref_decode_attention"]
+
+
+def ref_decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    *,
+    scale: float,
+    wrap: bool = False,
+) -> jax.Array:
+    """q: (b, h, hd) — the single query token per row; k/v: (b, t, kv, hd);
+    pos: (b,) int32 per-row positions; scales: (b, t, kv) or None.
+    Returns (b, h, hd)."""
+    t = k.shape[1]
+    t_idx = jnp.arange(t)
+    valid = t_idx[None, :] <= pos[:, None]
+    if wrap:
+        valid = valid | (pos[:, None] >= t)
+    mask = jnp.where(valid, 0.0, NEG_INF)[:, None, :]  # (b, 1, t)
+    out = _fold_masked_attention(q[:, None], k, v, mask, scale, k_scale, v_scale, q.dtype)
+    return out[:, 0]

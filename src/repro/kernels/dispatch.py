@@ -53,9 +53,18 @@ BACKENDS = ("auto", "compiled", "interpret", "reference")
 
 # Kernels known to the repo; get() lazily imports the ops module that
 # registers each one, so importing dispatch never drags in Pallas code.
-KNOWN = ("adam", "e2afs_rsqrt", "e2afs_sqrt", "kmeans_assign", "rmsnorm", "sobel")
+KNOWN = (
+    "adam",
+    "decode_attention",
+    "e2afs_rsqrt",
+    "e2afs_sqrt",
+    "kmeans_assign",
+    "rmsnorm",
+    "sobel",
+)
 _OPS_MODULE = {
     "adam": "repro.kernels.adam.ops",
+    "decode_attention": "repro.kernels.attention.ops",
     "e2afs_rsqrt": "repro.kernels.e2afs_sqrt.ops",
     "e2afs_sqrt": "repro.kernels.e2afs_sqrt.ops",
     "kmeans_assign": "repro.kernels.kmeans.ops",
@@ -108,10 +117,17 @@ def resolve_backend(interpret: Optional[bool] = None) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class TilingSpec:
-    """Candidate block sizes for a kernel; each block is a tuple of ints."""
+    """Candidate block sizes for a kernel; each block is a tuple of ints.
+
+    ``geometry`` optionally maps the kernel's positional args to the problem
+    geometry dict the roofline tile prior consumes (rows / row_elems /
+    ops_per_elem / streams — see :func:`repro.kernels.tuning.tile_geometry`);
+    kernels whose blocking axis is not the first array's leading dim (or
+    whose per-row work the default underestimates) register one here."""
 
     default: tuple
     candidates: tuple
+    geometry: Optional[Callable] = None
 
     def __post_init__(self):
         if tuple(self.default) not in tuple(tuple(c) for c in self.candidates):
@@ -185,7 +201,7 @@ def dispatch(
 
         block = tuning.choose_block(
             name, spec.tiling.candidates, spec.tiling.default, run, args,
-            interpret=interp, tune=tune,
+            interpret=interp, tune=tune, geometry=spec.tiling.geometry,
         )
     return spec.pallas(*args, block=tuple(block), interpret=interp, **kw)
 

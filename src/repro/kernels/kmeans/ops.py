@@ -30,13 +30,34 @@ def _pallas(px, cent, *, block, interpret):
     return assign[:n, 0], sums, counts[0]
 
 
+def _geometry(args):
+    """Tile-prior geometry: each pixel row is scored against every centroid,
+    so per-element work scales with K (the default prior would undercount
+    it by ~K and overfavor tiny tiles).  The tile cap holds the kernel's
+    memory contract — a per-tile (block_n, K, 3) working set far below the
+    broadcast path's N-proportional footprint — against a prior that would
+    otherwise pick one whole-input tile for mid-size images and degenerate
+    to exactly the (N, K, 3) materialization the kernel exists to avoid."""
+    px, cent = args[0], args[1]
+    n = int(px.shape[0])
+    return {
+        "rows": n,
+        "row_elems": max(int(px.size) // max(n, 1), 1),
+        "ops_per_elem": 3.0 * cent.shape[0],  # per channel: diff/mul/add x K
+        "streams": 2,
+        "max_block_rows": max(n // 4, 128),
+    }
+
+
 dispatch.register(
     dispatch.KernelSpec(
         name="kmeans_assign",
         reference=ref_kmeans_assign,
         pallas=_pallas,
         tiling=dispatch.TilingSpec(
-            default=(512,), candidates=((128,), (256,), (512,), (1024,), (2048,))
+            default=(512,),
+            candidates=((128,), (256,), (512,), (1024,), (2048,)),
+            geometry=_geometry,
         ),
     )
 )

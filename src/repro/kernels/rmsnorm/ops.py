@@ -33,8 +33,14 @@ dispatch.register(
         name="rmsnorm",
         reference=ref_rmsnorm,
         pallas=_pallas,
+        # candidates reach 512 rows so the roofline prior can amortize the
+        # per-grid-step overhead on training/bench shapes (the historical
+        # 8-row default is 64 launches for a (512, d) input — pure overhead
+        # in interpret mode); tiny inputs still clamp to one tile
         tiling=dispatch.TilingSpec(
-            default=(8,), candidates=((1,), (2,), (4,), (8,), (16,), (32,))
+            default=(8,),
+            candidates=((1,), (2,), (4,), (8,), (16,), (32,), (64,), (128,),
+                        (256,), (512,)),
         ),
     )
 )

@@ -35,9 +35,11 @@ from repro.optim import AdamWConfig, opt_state_specs
 
 LM_ARCHS = tuple(a for a in ARCH_IDS if a != "e2afs-fp16")
 
-# v5e hardware constants (roofline)
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # B/s / chip
+# v5e hardware constants (roofline); flops/BW from the shared ChipModel
+from repro.core.hw_model import TPU_V5E as _V5E  # noqa: E402
+
+PEAK_FLOPS = _V5E.peak_flops  # bf16 / chip
+HBM_BW = _V5E.hbm_bw  # B/s / chip
 ICI_BW = 50e9  # B/s / link
 
 

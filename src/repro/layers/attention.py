@@ -409,7 +409,7 @@ def attention_prefill(p, cfg, x, cache, positions, *, window: Optional[int] = No
 
 
 def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
-                     layer_idx=None):
+                     layer_idx=None, kernel: Optional[str] = None):
     """Single-token decode. x: (b, 1, d); cache holds ``cache_len`` slots.
 
     ``pos`` is either a scalar (lock-step batch: every row at the same
@@ -420,6 +420,12 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     For sliding-window layers the cache is a ring buffer of size ``window``.
     With ``layer_idx``, cache tensors carry a leading stacked-layers axis and
     are updated in place (see _cache_update).  Returns (out, new_cache).
+
+    ``kernel`` routes the scored-attention block (defaults to
+    ``cfg.decode_kernel``): None keeps the inline XLA path; "fused" runs the
+    Pallas decode-attention kernel via the dispatch layer; "reference" runs
+    the kernel's pure-jnp oracle (same math, useful for bisecting).  The
+    projections, cache write and wo projection are identical on every route.
     """
     b, s, d = x.shape
     assert s == 1
@@ -472,6 +478,28 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
         }
         k = _cache_read(cache["k"], layer_idx)
         v = _cache_read(cache["v"], layer_idx)
+
+    kernel = kernel if kernel is not None else getattr(cfg, "decode_kernel", None)
+    if kernel:
+        # fused Pallas route (docs/kernels.md): the validity mask is built
+        # in-kernel from per-row positions, so only ``pos`` crosses the
+        # boundary; the scalar lock-step case broadcasts to the per-slot form
+        # (identical mask rows, identical math)
+        from repro.kernels.attention import ops as attn_kernel
+
+        if kernel not in ("fused", "reference"):
+            raise ValueError(
+                f"unknown decode kernel {kernel!r}; expected 'fused' or 'reference'"
+            )
+        fn = (attn_kernel.ref_decode_attention if kernel == "reference"
+              else attn_kernel.decode_attention)
+        pos_b = pos if per_slot else jnp.broadcast_to(pos, (b,))
+        out = fn(
+            q[:, 0], k, v, pos_b, k_scale, v_scale,
+            scale=cfg.d_head**-0.5, wrap=bool(window),
+        )[:, None]
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        return out, cache
 
     # mask out unwritten slots: before the ring wraps only slots <= pos hold
     # tokens (treating unwritten zero-K slots as valid leaks exp(0) mass

@@ -69,6 +69,10 @@ class ModelConfig:
     scores_dtype: str = "float32"
     sqrt_unit: str = "exact"
     remat: str = "block"  # "none" | "block" | "minimal"
+    # decode-attention route for the serving hot loop: None = inline XLA
+    # path; "fused" = the Pallas decode-attention kernel via the dispatch
+    # layer; "reference" = the kernel's pure-jnp oracle (docs/kernels.md)
+    decode_kernel: Optional[str] = None
 
     # ------------------------------------------------------------------
     @property
@@ -116,4 +120,5 @@ class ModelConfig:
             assert self.rglru is not None
         if self.kind == "encdec":
             assert self.encoder is not None
+        assert self.decode_kernel in (None, "fused", "reference")
         return self

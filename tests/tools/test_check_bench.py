@@ -1,0 +1,134 @@
+"""tools/check_bench.py: the perf-regression gate must pass in-bounds
+results, fail on a seeded regression, only warn in warn mode, and fail when
+a required results file is missing — exercised against both synthetic specs
+and the committed baseline schema."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_bench  # noqa: E402
+
+
+def _write(tmp_path, name, payload):
+    d = tmp_path / name
+    d.parent.mkdir(parents=True, exist_ok=True)
+    d.write_text(json.dumps(payload))
+    return d
+
+
+@pytest.fixture()
+def dirs(tmp_path):
+    results = tmp_path / "results"
+    baselines = tmp_path / "baselines"
+    results.mkdir()
+    baselines.mkdir()
+    return results, baselines
+
+
+def _gate(baselines, metrics, mode="gate", stem="lane"):
+    _write(baselines, f"{stem}.json",
+           {"results": "lane.json", "mode": mode, "metrics": metrics})
+
+
+class TestCheckMetric:
+    def test_max_bound(self):
+        assert check_bench.check_metric("r", 1.5, {"max": 2.0}) is None
+        assert "exceeds max" in check_bench.check_metric("r", 2.5, {"max": 2.0})
+
+    def test_min_bound(self):
+        assert check_bench.check_metric("r", 1.5, {"min": 1.0}) is None
+        assert "below min" in check_bench.check_metric("r", 0.5, {"min": 1.0})
+
+    def test_baseline_rel_tol(self):
+        rule = {"baseline": 100.0, "rel_tol": 0.5}
+        assert check_bench.check_metric("us", 149.0, rule) is None
+        assert "exceeds baseline" in check_bench.check_metric("us", 151.0, rule)
+
+
+class TestGate:
+    def test_in_bounds_exits_zero(self, dirs, capsys):
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}})
+        _write(results, "lane.json", {"rmsnorm_ratio": 1.1})
+        assert check_bench.run(results, baselines) == 0
+        assert "ok   lane" in capsys.readouterr().out
+
+    def test_seeded_regression_exits_nonzero(self, dirs, capsys):
+        """Flipping a ratio past its committed ceiling must fail the gate —
+        the CI contract for a fused kernel that starts losing to its ref."""
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}})
+        _write(results, "lane.json", {"rmsnorm_ratio": 24.0})  # block-8 era
+        assert check_bench.run(results, baselines) == 1
+        assert "FAIL lane" in capsys.readouterr().out
+
+    def test_warn_mode_never_fails(self, dirs, capsys):
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}}, mode="warn")
+        _write(results, "lane.json", {"rmsnorm_ratio": 24.0})
+        assert check_bench.run(results, baselines) == 0
+        assert "WARN lane" in capsys.readouterr().out
+
+    def test_missing_results_skipped_unless_required(self, dirs, capsys):
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}})
+        assert check_bench.run(results, baselines) == 0
+        assert "skip lane" in capsys.readouterr().out
+        assert check_bench.run(results, baselines, require=("lane",)) == 1
+        assert "required results file" in capsys.readouterr().out
+
+    def test_missing_metric_is_a_violation(self, dirs):
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}})
+        _write(results, "lane.json", {"something_else": 1.0})
+        assert check_bench.run(results, baselines) == 1
+
+    def test_no_baselines_is_config_error(self, dirs):
+        results, baselines = dirs
+        assert check_bench.run(results, baselines) == 2
+
+    def test_main_cli_wiring(self, dirs):
+        results, baselines = dirs
+        _gate(baselines, {"rmsnorm_ratio": {"max": 2.0}})
+        argv = ["--results", str(results), "--baselines", str(baselines),
+                "--require", "lane"]
+        assert check_bench.main(argv) == 1  # required file absent
+        _write(results, "lane.json", {"rmsnorm_ratio": 1.0})
+        assert check_bench.main(argv) == 0
+
+
+class TestCommittedBaselines:
+    """The baselines actually wired into ci.yml parse and gate correctly."""
+
+    @pytest.mark.parametrize("stem,mode", [
+        ("kernels_bench", "warn"),
+        ("kernels_bench_compiled", "gate"),
+    ])
+    def test_schema(self, stem, mode):
+        spec = json.loads((REPO / "benchmarks" / "baselines" / f"{stem}.json").read_text())
+        assert spec["mode"] == mode
+        assert spec["results"] == f"{stem}.json"
+        for rule in spec["metrics"].values():
+            assert {"max", "min", "baseline"} & set(rule)
+
+    def test_compiled_gate_fails_on_regressed_ratio(self, tmp_path):
+        """Seed a results file where every gated ratio regressed 10x past
+        its ceiling: the committed compiled-lane baseline must reject it."""
+        baselines = REPO / "benchmarks" / "baselines"
+        spec = json.loads((baselines / "kernels_bench_compiled.json").read_text())
+        bad = {k: float(rule["max"]) * 10.0
+               for k, rule in spec["metrics"].items() if "max" in rule}
+        results = tmp_path / "results"
+        results.mkdir()
+        _write(results, spec["results"], bad)
+        assert check_bench.run(results, baselines) == 1
+        good = {k: float(rule["max"]) * 0.5
+                for k, rule in spec["metrics"].items() if "max" in rule}
+        _write(results, spec["results"], good)
+        assert check_bench.run(results, baselines,
+                               require=("kernels_bench_compiled",)) == 0

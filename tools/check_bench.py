@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the bench JSON artifacts (stdlib only).
+
+Compares ``experiments/results/*.json`` against the committed baselines in
+``benchmarks/baselines/`` and fails CI when a gated metric regresses past
+its tolerance.  Each baseline file looks like::
+
+    {
+      "results": "kernels_bench_compiled.json",   # file under --results
+      "mode": "gate",                             # "gate" fails, "warn" prints
+      "metrics": {
+        "rmsnorm_ratio": {"max": 2.0},            # absolute ceiling
+        "kmeans_assign_ratio": {"max": 1.5},
+        "decode_attention_us": {"baseline": 33000, "rel_tol": 0.5}
+      }
+    }
+
+A metric rule is either an absolute bound ({"max": x} and/or {"min": y}) or
+a recorded baseline with a relative tolerance ({"baseline": b, "rel_tol":
+r} — violated when value > b * (1 + r)).  Compiled-lane ratios are gated
+(fused must not lose to its reference beyond the per-op tolerance);
+interpret-lane numbers are trajectory-only and use "warn" mode.  A missing
+results file is skipped unless its baseline stem is listed via --require
+(bench smokes that CI just ran must have produced their JSON).
+
+Refreshing baselines and overriding failures: docs/kernels.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_RESULTS = "experiments/results"
+DEFAULT_BASELINES = "benchmarks/baselines"
+
+
+def check_metric(key: str, value: float, rule: dict) -> str | None:
+    """Returns a violation message, or None when the metric is in bounds."""
+    if "baseline" in rule:
+        limit = float(rule["baseline"]) * (1.0 + float(rule.get("rel_tol", 0.25)))
+        if value > limit:
+            return (f"{key} = {value:.4g} exceeds baseline {rule['baseline']:.4g} "
+                    f"(+{float(rule.get('rel_tol', 0.25)):.0%} tolerance -> {limit:.4g})")
+        return None
+    if "max" in rule and value > float(rule["max"]):
+        return f"{key} = {value:.4g} exceeds max {float(rule['max']):.4g}"
+    if "min" in rule and value < float(rule["min"]):
+        return f"{key} = {value:.4g} below min {float(rule['min']):.4g}"
+    return None
+
+
+def check_baseline(baseline_path: Path, results_dir: Path):
+    """Returns (results_name, mode, found, violations) for one baseline file."""
+    spec = json.loads(baseline_path.read_text())
+    results_name = spec.get("results", baseline_path.name)
+    target = results_dir / results_name
+    if not target.exists():
+        return results_name, spec.get("mode", "gate"), False, []
+    results = json.loads(target.read_text())
+    violations = []
+    for key, rule in spec.get("metrics", {}).items():
+        if key not in results:
+            violations.append(f"{key}: missing from {results_name}")
+            continue
+        value = results[key]
+        if not isinstance(value, (int, float)):
+            violations.append(f"{key}: non-numeric value {value!r}")
+            continue
+        msg = check_metric(key, float(value), rule)
+        if msg is not None:
+            violations.append(msg)
+    return results_name, spec.get("mode", "gate"), True, violations
+
+
+def run(results_dir: Path, baselines_dir: Path, require: tuple = ()) -> int:
+    baseline_files = sorted(baselines_dir.glob("*.json"))
+    if not baseline_files:
+        print(f"check_bench: no baselines under {baselines_dir}", file=sys.stderr)
+        return 2
+    failures = 0
+    required = {r.removesuffix(".json") for r in require}
+    for bfile in baseline_files:
+        name, mode, found, violations = check_baseline(bfile, results_dir)
+        stem = bfile.name.removesuffix(".json")
+        if not found:
+            if stem in required:
+                print(f"FAIL {stem}: required results file {name} not found")
+                failures += 1
+            else:
+                print(f"skip {stem}: no {name} in {results_dir}")
+            continue
+        if not violations:
+            print(f"ok   {stem}: all metrics within bounds")
+        elif mode == "warn":
+            for v in violations:
+                print(f"WARN {stem}: {v}")
+        else:
+            for v in violations:
+                print(f"FAIL {stem}: {v}")
+            failures += 1
+    if failures:
+        print(f"\ncheck_bench: {failures} baseline(s) violated — see "
+              "docs/kernels.md for the refresh/override procedure")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", default=DEFAULT_RESULTS,
+                    help="directory holding bench JSON artifacts")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES,
+                    help="directory holding committed baseline specs")
+    ap.add_argument("--require", action="append", default=[],
+                    help="baseline stem whose results file must exist "
+                         "(repeatable); others are skipped when absent")
+    args = ap.parse_args(argv)
+    return run(Path(args.results), Path(args.baselines), tuple(args.require))
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
