@@ -23,6 +23,17 @@ Shape knobs for CI smokes:
     REPRO_ENGINE_BENCH_SEED     (default 0)
     REPRO_ENGINE_BENCH_REPS     (default 3, best-of replays per scheduler)
 
+Faults lane (``--faults`` or REPRO_ENGINE_BENCH_FAULTS=1): replays the same
+trace three ways — detectors off, detectors on (guardrail overhead must stay
+under ~5% and tokens must stay bit-equal), and under a seeded fault schedule
+(recovery throughput: how much tok/s the quarantine + exact-fallback ladder
+costs while every request still lands a non-failed status).  Artifact:
+``experiments/results/engine_bench_faults.json``, gated (warn mode) by the
+committed baseline in ``benchmarks/baselines/``.  Extra knobs:
+    REPRO_ENGINE_BENCH_FAULT_SITE (default logit_nan; any core.faults site)
+    REPRO_ENGINE_BENCH_FAULT_RATE (default 0.02)
+    REPRO_ENGINE_BENCH_FAULT_SEED (default 0)
+
 Mesh lane (``--mesh`` or REPRO_ENGINE_BENCH_MESH=1): replays the same trace
 through the engine on a forced-host-device ``(data=2, model=2)`` mesh, in
 both serving shardings — ``exact`` (params replicated, slots sharded over
@@ -52,7 +63,14 @@ import numpy as np
 
 from benchmarks.common import md_table, save
 from repro.configs import get_smoke_config
-from repro.launch.engine import Engine, Request, run_static_baseline, solo_generate
+from repro.core import FaultConfig
+from repro.launch.engine import (
+    STATUSES,
+    Engine,
+    Request,
+    run_static_baseline,
+    solo_generate,
+)
 from repro.models import lm
 
 
@@ -101,7 +119,91 @@ def _run_mesh_lane(params, cfg, reqs, *, slots, cache_len, chunk, prompts,
     return out
 
 
-def run(mesh_lane: bool = False):
+def _run_faults_lane(params, cfg, reqs, *, arch, slots, cache_len, chunk,
+                     prompts, reps):
+    """Guardrail overhead + recovery throughput (docs/robustness.md §Bench).
+
+    Three replays of the same trace: detectors off (the pre-guardrail
+    engine), detectors on fault-free (overhead must be small and the tokens
+    bit-equal — the health reductions never perturb the decode carry), and
+    detectors on under a seeded fault schedule (the quarantine + exact-
+    fallback ladder's throughput cost while every request still completes).
+    """
+    site = os.environ.get("REPRO_ENGINE_BENCH_FAULT_SITE", "logit_nan")
+    rate = float(os.environ.get("REPRO_ENGINE_BENCH_FAULT_RATE", 0.02))
+    fseed = int(os.environ.get("REPRO_ENGINE_BENCH_FAULT_SEED", 0))
+    fault_cfg = FaultConfig(site, rate, seed=fseed)
+
+    def best_of(**engine_kw):
+        eng = Engine(params, cfg, num_slots=slots, cache_len=cache_len,
+                     chunk=chunk, **engine_kw)
+        eng.warmup(prompt_lens=prompts)
+        done = best = None
+        for _ in range(max(1, reps)):
+            eng.reset()
+            d = eng.run(reqs)
+            if best is None or eng.stats["tok_s"] > best["tok_s"]:
+                done, best = d, dict(eng.stats, **_latencies(d))
+        return done, best
+
+    done_off, s_off = best_of(detectors=False)
+    done_on, s_on = best_of()
+    overhead_pct = (1.0 - s_on["tok_s"] / max(s_off["tok_s"], 1e-9)) * 100.0
+    token_exact = all(
+        np.array_equal(done_on[r.uid].tokens, done_off[r.uid].tokens)
+        for r in reqs
+    )
+
+    done_f, s_f = best_of(faults=fault_cfg, quarantine_retries=1)
+    n = len(reqs)
+    recovered_frac = (s_f["n_ok"] + s_f["n_degraded"]) / max(n, 1)
+    recovery_tok_s_frac = s_f["tok_s"] / max(s_on["tok_s"], 1e-9)
+
+    rows = [
+        ["detectors off", f"{s_off['tok_s']:.0f}",
+         f"{s_off['p50_latency_ms']:.0f}", f"{s_off['p99_latency_ms']:.0f}", "-"],
+        ["detectors on", f"{s_on['tok_s']:.0f}",
+         f"{s_on['p50_latency_ms']:.0f}", f"{s_on['p99_latency_ms']:.0f}",
+         f"{overhead_pct:+.1f}% ovh"],
+        [f"faulted[{site}@{rate}]", f"{s_f['tok_s']:.0f}",
+         f"{s_f['p50_latency_ms']:.0f}", f"{s_f['p99_latency_ms']:.0f}",
+         f"{s_f['faults_detected']} trips/{s_f['exact_fallbacks']} exact"],
+    ]
+    print(f"\n== Faults lane ({arch}, slots={slots}, n={n}, site={site}, "
+          f"rate={rate}, seed={fseed}; informational) ==")
+    print(md_table(["engine", "tok/s", "p50 ms", "p99 ms", "guardrails"], rows))
+    print(f"detector overhead {overhead_pct:+.1f}% | detectors token-exact: "
+          f"{token_exact} | recovered {recovered_frac:.0%} of requests at "
+          f"{recovery_tok_s_frac:.0%} fault-free tok/s")
+
+    payload = {
+        "arch": arch,
+        "num_slots": slots,
+        "n_requests": n,
+        "chunk": chunk,
+        "fault_site": site,
+        "fault_rate": rate,
+        "fault_seed": fseed,
+        "detectors_off": s_off,
+        "detectors_on": s_on,
+        "faulted": s_f,
+        "detector_overhead_pct": overhead_pct,
+        "detectors_token_exact": bool(token_exact),
+        "recovered_frac": recovered_frac,
+        "recovery_tok_s_frac": recovery_tok_s_frac,
+        "statuses": {s: s_f[f"n_{s}"] for s in STATUSES},
+    }
+    save("engine_bench_faults", payload)
+    # after save, so the JSON survives for debugging
+    if not token_exact:
+        raise AssertionError(
+            "health detectors perturbed fault-free decode: detectors-on "
+            "tokens diverged from detectors-off"
+        )
+    return payload
+
+
+def run(mesh_lane: bool = False, faults_lane: bool = False):
     arch = os.environ.get("REPRO_ENGINE_BENCH_ARCH", "qwen3-4b")
     slots = int(os.environ.get("REPRO_ENGINE_BENCH_SLOTS", 4))
     n_requests = int(os.environ.get("REPRO_ENGINE_BENCH_REQUESTS", 32))
@@ -112,6 +214,9 @@ def run(mesh_lane: bool = False):
     seed = int(os.environ.get("REPRO_ENGINE_BENCH_SEED", 0))
     reps = int(os.environ.get("REPRO_ENGINE_BENCH_REPS", 3))
     mesh_lane = mesh_lane or os.environ.get("REPRO_ENGINE_BENCH_MESH", "") == "1"
+    faults_lane = (
+        faults_lane or os.environ.get("REPRO_ENGINE_BENCH_FAULTS", "") == "1"
+    )
     if mesh_lane and jax.device_count() < 4:
         raise RuntimeError(
             "mesh lane needs >= 4 devices: run `python -m benchmarks.engine_bench "
@@ -136,6 +241,12 @@ def run(mesh_lane: bool = False):
         for i in range(n_requests)
     ]
     cache_len = max(prompts) + max(gens) + 1
+
+    if faults_lane:
+        return _run_faults_lane(
+            params, cfg, reqs, arch=arch, slots=slots, cache_len=cache_len,
+            chunk=chunk, prompts=prompts, reps=reps,
+        )
 
     # best-of-N replays per scheduler: both replay the same trace; scheduler
     # noise on a shared machine only ever slows a replay down
@@ -245,8 +356,14 @@ def main():
         help="also run the (data=2, model=2) sharded-engine lane "
              "(forces 4 host devices; artifact: engine_bench_mesh.json)",
     )
+    ap.add_argument(
+        "--faults", action="store_true",
+        help="run the fault-tolerance lane instead: detector overhead, "
+             "fault-free token parity, and recovery throughput under a "
+             "seeded fault schedule (artifact: engine_bench_faults.json)",
+    )
     args = ap.parse_args()
-    run(mesh_lane=args.mesh)
+    run(mesh_lane=args.mesh, faults_lane=args.faults)
 
 
 if __name__ == "__main__":

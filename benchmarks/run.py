@@ -20,6 +20,7 @@ SUITES = (
     "kmeans_bench",     # fused vs broadcast K-means iteration (informational)
     "serve_bench",      # prefill + scan decode vs per-token loop (informational)
     "engine_bench",     # continuous batching vs lock-step static (informational)
+    "engine_bench_faults",  # detector overhead + fault recovery (warn gate input)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 
@@ -27,6 +28,7 @@ SUITES = (
 # of another module rather than a module of their own
 ALIASES = {
     "kernels_bench_compiled": ("kernels_bench", {"backend": "compiled"}),
+    "engine_bench_faults": ("engine_bench", {"faults_lane": True}),
 }
 
 

@@ -4,15 +4,19 @@ Public API:
     get_unit(name) -> SqrtUnit          # "e2afs" | "esas" | "cwaha4" | "cwaha8" | "exact"
     e2afs_sqrt / e2afs_rsqrt            # the paper's datapath (+ E2AFS-R extension)
     error_metrics(fn)                   # paper's MED/MRED/NMED/MSE/EDmax suite
+    FaultConfig                         # seeded fault schedules (docs/robustness.md)
 """
 from repro.core.cwaha import cwaha_sqrt
 from repro.core.e2afs import e2afs_rsqrt, e2afs_sqrt
 from repro.core.esas import esas_sqrt
 from repro.core.exact import exact_rsqrt, exact_sqrt
+from repro.core.faults import FAULT_SITES, FaultConfig
 from repro.core.metrics import ErrorMetrics, error_metrics
 from repro.core.units import SqrtUnit, available_units, get_unit
 
 __all__ = [
+    "FAULT_SITES",
+    "FaultConfig",
     "cwaha_sqrt",
     "e2afs_rsqrt",
     "e2afs_sqrt",

@@ -92,13 +92,29 @@ def e2afs_sqrt_positive(x: jax.Array) -> jax.Array:
     return jnp.where(x <= 0.0, jnp.zeros_like(res), res)
 
 
-def e2afs_sqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
-    """Approximate sqrt via the E2AFS datapath.  Same dtype in/out."""
+def e2afs_sqrt(x: jax.Array, *, ftz: bool = True, faults=None) -> jax.Array:
+    """Approximate sqrt via the E2AFS datapath.  Same dtype in/out.
+
+    ``faults`` (a :class:`repro.core.faults.FaultConfig` targeting a sqrt
+    site) strikes the output fields between the datapath and compose —
+    special inputs still route through ``apply_specials`` unfaulted, exactly
+    as a datapath-internal upset would behave.
+    """
     fmt = format_of(x.dtype)
     sign, exp, man = numerics.decompose(x, fmt)
     exp_out, man_out = _e2afs_mantissa_exponent(exp, man, fmt)
+    exp_out, man_out = _maybe_fault(exp_out, man_out, fmt, faults)
     result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
     return numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)
+
+
+def _maybe_fault(exp_out, man_out, fmt: FloatFormat, faults):
+    if faults is None:
+        return exp_out, man_out
+    from repro.core.faults import flip_fields
+
+    exp_out, man_out = flip_fields(exp_out, man_out, fmt, faults)
+    return exp_out & fmt.exp_mask, man_out & fmt.man_mask
 
 
 # ---------------------------------------------------------------------------
@@ -171,15 +187,22 @@ def _rsqrt_mantissa_exponent(exp, man, fmt: FloatFormat):
     return exp_out, man_out
 
 
-def e2afs_rsqrt(x: jax.Array, *, ftz: bool = True) -> jax.Array:
+def e2afs_rsqrt(x: jax.Array, *, ftz: bool = True, faults=None) -> jax.Array:
     """Approximate rsqrt via the E2AFS-R datapath (beyond-paper extension)."""
     fmt = format_of(x.dtype)
     sign, exp, man = numerics.decompose(x, fmt)
     exp_out, man_out = _rsqrt_mantissa_exponent(exp, man, fmt)
+    exp_out, man_out = _maybe_fault(exp_out, man_out, fmt, faults)
     result = numerics.compose(jnp.zeros_like(sign), exp_out, man_out, fmt)
     out = numerics.apply_specials(result, x, sign, exp, man, fmt, ftz=ftz)
     # rsqrt-specific specials override: rsqrt(0) = +inf, rsqrt(inf) = 0.
+    # Under ftz a positive subnormal *is* zero to the datapath, so it gets
+    # the same +inf — not the silent 0 that apply_specials' flush alone
+    # would leave (pinned in tests/core/test_properties.py).  Negative
+    # subnormals keep apply_specials' NaN.
     is_zero = (exp == 0) & (man == 0)
+    if ftz:
+        is_zero = is_zero | ((exp == 0) & (sign == 0))
     is_inf = (exp == fmt.exp_mask) & (man == 0) & (sign == 0)
     out = jnp.where(is_zero, jnp.array(jnp.inf, out.dtype), out)
     out = jnp.where(is_inf, jnp.zeros_like(out), out)

@@ -1,0 +1,218 @@
+"""Deterministic, seeded fault model for error-tolerant serving.
+
+The source paper trades bit-exactness for energy on workloads that survive
+deviation; this module supplies the *errors* — a replayable fault model the
+engine's guardrail layer (docs/robustness.md) is tested and benchmarked
+against.  Three fault surfaces, one :class:`FaultConfig`:
+
+* **sqrt datapath bit flips** (``site="sqrt_man"`` / ``"sqrt_exp"``) —
+  single-bit flips in the mantissa / exponent output fields of the
+  approximate sqrt/rsqrt datapaths.  ``core/e2afs.py`` injects them between
+  the integer datapath and the compose step (so the IEEE specials policy
+  still routes special inputs around the fault), and ``core/units.py``
+  threads the same config through every unit and the Pallas kernel route
+  (kernels model the flip at the output register via
+  :func:`flip_float_bits`).
+* **activation corruption** (``site="logit_nan"`` / ``"logit_inf"``) —
+  NaN/Inf writes into the decode-step logits, applied by the hook
+  :func:`logits_hook` inside the engine's jitted decode chunk — the exact
+  signal the per-slot non-finite detector must catch.
+* **dispatch failures** (``site="dispatch"``) — host-side simulated launch
+  failures (:class:`DispatchFaultInjector` raising :class:`DispatchFault`
+  *before* the device call, so donated buffers are never half-consumed),
+  exercising the engine's retry-with-backoff path.
+
+Determinism contract: on-device fault decisions are a pure function of
+``(value bits, flat element index, seed)`` — a cheap integer avalanche hash
+per element, no PRNG key threading — so the same run replays the exact same
+fault schedule, on any backend, under jit, vmap and scan.  Host-side
+dispatch faults draw from a ``random.Random(seed)`` stream that the engine
+resets with the pool, giving the same per-call schedule on every replay.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import FloatFormat, format_of
+
+__all__ = [
+    "FAULT_SITES",
+    "FaultConfig",
+    "fault_mask",
+    "flip_fields",
+    "flip_float_bits",
+    "corrupt_logits",
+    "logits_hook",
+    "DispatchFault",
+    "DispatchFaultInjector",
+]
+
+FAULT_SITES = ("sqrt_man", "sqrt_exp", "logit_nan", "logit_inf", "dispatch")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """One seeded fault schedule: ``site`` picks the surface, ``rate`` the
+    per-element (or per-dispatch) fault probability, ``seed`` the schedule.
+    ``bit`` pins the flipped bit *within* the targeted field (0 = LSB);
+    ``None`` derives it per element from the hash.  Frozen/hashable so it
+    can ride :class:`~repro.models.config.ModelConfig` through jit caches.
+    """
+
+    site: str
+    rate: float
+    seed: int = 0
+    bit: Optional[int] = None
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r}; available: {FAULT_SITES}"
+            )
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1], got {self.rate}")
+
+    @property
+    def targets_sqrt(self) -> bool:
+        return self.site in ("sqrt_man", "sqrt_exp")
+
+    @property
+    def targets_logits(self) -> bool:
+        return self.site in ("logit_nan", "logit_inf")
+
+    @property
+    def targets_dispatch(self) -> bool:
+        return self.site == "dispatch"
+
+
+# ---------------------------------------------------------------------------
+# On-device deterministic fault decisions
+# ---------------------------------------------------------------------------
+
+_GOLDEN = 0x9E3779B9  # 2^32 / phi — the classic Weyl increment
+
+
+def _mix32(h):
+    """32-bit avalanche (murmur3 finalizer); uint32 in, uint32 out."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x7FEB352D)
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x846CA68B)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _entropy(bits, seed: int):
+    """Per-element uint32 hash of (value bits, flat index, seed)."""
+    idx = jnp.arange(bits.size, dtype=jnp.uint32).reshape(bits.shape)
+    h = bits.astype(jnp.uint32) ^ _mix32(idx ^ jnp.uint32(seed & 0xFFFFFFFF))
+    return _mix32(h ^ jnp.uint32((seed * _GOLDEN) & 0xFFFFFFFF))
+
+
+def fault_mask(bits, rate: float, seed: int):
+    """Boolean fault-strike mask, elementwise over ``bits`` (any int array).
+
+    A pure function of (bits, index, seed): replaying the same values under
+    the same seed reproduces the identical strike pattern.
+    """
+    if rate <= 0.0:
+        return jnp.zeros(bits.shape, bool)
+    thr = jnp.uint32(min(int(rate * float(1 << 32)), (1 << 32) - 1))
+    return _entropy(bits, seed) < thr
+
+
+def _bit_choice(bits, seed: int, width: int, pinned: Optional[int]):
+    """Which bit of a ``width``-bit field to flip, per element (int32)."""
+    if pinned is not None:
+        return jnp.full(bits.shape, int(pinned) % width, jnp.int32)
+    h = _entropy(bits, seed ^ 0x5BF03635)
+    return (h % jnp.uint32(width)).astype(jnp.int32)
+
+
+def flip_fields(exp, man, fmt: FloatFormat, cfg: FaultConfig):
+    """Strike the (exponent, mantissa) int32 field pair of a decomposed float:
+    flip one seeded bit of the targeted field on hash-selected elements.
+    This is the in-datapath injection point ``core/e2afs.py`` uses between
+    its integer datapath and ``numerics.compose``.
+    """
+    if not cfg.targets_sqrt or cfg.rate <= 0.0:
+        return exp, man
+    entropy_src = ((exp & fmt.exp_mask) << fmt.man_bits) | (man & fmt.man_mask)
+    strike = fault_mask(entropy_src, cfg.rate, cfg.seed)
+    if cfg.site == "sqrt_man":
+        bit = _bit_choice(entropy_src, cfg.seed, fmt.man_bits, cfg.bit)
+        man = jnp.where(strike, man ^ (1 << bit), man)
+    else:  # sqrt_exp
+        bit = _bit_choice(entropy_src, cfg.seed, fmt.exp_bits, cfg.bit)
+        exp = jnp.where(strike, exp ^ (1 << bit), exp)
+    return exp, man
+
+
+def flip_float_bits(x: jax.Array, cfg: FaultConfig) -> jax.Array:
+    """Output-register form of :func:`flip_fields`: decompose a float array,
+    strike the targeted field, recompose.  Used where the datapath itself is
+    opaque (the Pallas kernel route, baseline units without a ``faults=``
+    hook)."""
+    if not cfg.targets_sqrt or cfg.rate <= 0.0:
+        return x
+    fmt = format_of(x.dtype)
+    sign, exp, man = numerics.decompose(x, fmt)
+    exp, man = flip_fields(exp, man, fmt, cfg)
+    return numerics.compose(sign, exp & fmt.exp_mask, man & fmt.man_mask, fmt)
+
+
+def corrupt_logits(logits: jax.Array, cfg: FaultConfig) -> jax.Array:
+    """NaN/Inf activation injection into a float logits array (fp32)."""
+    if not cfg.targets_logits or cfg.rate <= 0.0:
+        return logits
+    lg = logits.astype(jnp.float32)
+    bits = jax.lax.bitcast_convert_type(lg, jnp.uint32)
+    strike = fault_mask(bits, cfg.rate, cfg.seed)
+    bad = jnp.float32(jnp.nan if cfg.site == "logit_nan" else jnp.inf)
+    return jnp.where(strike, bad, lg).astype(logits.dtype)
+
+
+def logits_hook(cfg: Optional[FaultConfig]) -> Optional[Callable]:
+    """The per-step logits corruption hook the engine threads into
+    ``lm.decode_slots_scan(logits_hook=)``; ``None`` when the config does
+    not target activations."""
+    if cfg is None or not cfg.targets_logits:
+        return None
+    return lambda lg: corrupt_logits(lg, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Host-side dispatch failures
+# ---------------------------------------------------------------------------
+
+
+class DispatchFault(RuntimeError):
+    """An injected device-dispatch failure (raised *before* the call, so no
+    donated buffer is ever half-consumed)."""
+
+
+class DispatchFaultInjector:
+    """Seeded host-side failure schedule: one draw per dispatch attempt.
+
+    ``reset()`` rewinds the stream so an engine replay (``Engine.reset`` +
+    ``run``) sees the identical per-call schedule.
+    """
+
+    def __init__(self, cfg: FaultConfig):
+        if not cfg.targets_dispatch:
+            raise ValueError(f"DispatchFaultInjector needs site='dispatch', got {cfg.site!r}")
+        self.cfg = cfg
+        self.reset()
+
+    def reset(self):
+        self._rng = random.Random(self.cfg.seed)
+
+    def should_fail(self) -> bool:
+        return self._rng.random() < self.cfg.rate

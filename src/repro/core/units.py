@@ -20,6 +20,14 @@ Two integration points with the kernel dispatch layer:
 * units with a Pallas route accept ``kernel=True`` (per call, or via
   ``get_unit(name, kernel=True)`` as the default) to hit the fused/tiled
   kernel path instead of the pure-jnp datapath.
+
+Fault injection (docs/robustness.md): ``get_unit(name, faults=cfg)`` returns
+a unit whose sqrt/rsqrt strike seeded bit flips into the datapath — in the
+output fields pre-compose for e2afs (native ``faults=`` hook, bypassing the
+``custom_jvp`` wrapper: injection is inference-only), at the output register
+(:func:`repro.core.faults.flip_float_bits`) for kernel routes and the
+baseline units.  The exact unit also takes the output-register flip, so the
+fault model composes with any datapath.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ from typing import Callable, Optional
 import jax
 
 from repro.core import cwaha, e2afs, esas, exact
+from repro.core.faults import FaultConfig, flip_float_bits
 from repro.kernels.dispatch import make_differentiable_rsqrt, make_differentiable_sqrt
 
 __all__ = ["SqrtUnit", "get_unit", "available_units"]
@@ -56,6 +65,9 @@ class SqrtUnit:
     _kernel_sqrt: Optional[Callable] = None  # Pallas route via the dispatch layer
     _kernel_rsqrt: Optional[Callable] = None
     kernel_default: bool = False  # route through the kernel unless overridden
+    faults: Optional[FaultConfig] = None  # seeded datapath fault schedule
+    _fault_sqrt: Optional[Callable] = None  # raw datapath with a faults= hook
+    _fault_rsqrt: Optional[Callable] = None
 
     def _use_kernel(self, kernel: Optional[bool]) -> bool:
         use = self.kernel_default if kernel is None else kernel
@@ -63,16 +75,32 @@ class SqrtUnit:
             raise ValueError(f"unit {self.name!r} has no kernel route")
         return use
 
+    def _fault_active(self) -> bool:
+        return self.faults is not None and self.faults.targets_sqrt and self.faults.rate > 0.0
+
     def sqrt(self, x: jax.Array, *, kernel: Optional[bool] = None, **kw) -> jax.Array:
         if self._use_kernel(kernel):
-            return self._kernel_sqrt(x, **kw)
+            y = self._kernel_sqrt(x, **kw)
+            return flip_float_bits(y, self.faults) if self._fault_active() else y
+        if self._fault_active():
+            if self._fault_sqrt is not None:
+                return self._fault_sqrt(x, faults=self.faults, **kw)
+            return flip_float_bits(self._sqrt(x, **kw), self.faults)
         return self._sqrt(x, **kw)
 
     def rsqrt(self, x: jax.Array, *, kernel: Optional[bool] = None, **kw) -> jax.Array:
         if self._use_kernel(kernel):
             if self._kernel_rsqrt is not None:
-                return self._kernel_rsqrt(x, **kw)
-            return 1.0 / self._kernel_sqrt(x, **kw)
+                y = self._kernel_rsqrt(x, **kw)
+            else:
+                y = 1.0 / self._kernel_sqrt(x, **kw)
+            return flip_float_bits(y, self.faults) if self._fault_active() else y
+        if self._fault_active():
+            if self._fault_rsqrt is not None:
+                return self._fault_rsqrt(x, faults=self.faults, **kw)
+            # composed rsqrt: fault the sqrt stage, exactly as the hardware
+            # composition (approx sqrt -> exact reciprocal) would see it
+            return 1.0 / self.sqrt(x, kernel=kernel, **kw)
         if self._rsqrt is not None:
             return self._rsqrt(x, **kw)
         return 1.0 / self._sqrt(x, **kw)
@@ -91,6 +119,8 @@ _REGISTRY = {
         "paper's dual-level shift-add datapath",
         _kernel_sqrt=_kernel_sqrt,
         _kernel_rsqrt=_kernel_rsqrt,
+        _fault_sqrt=e2afs.e2afs_sqrt,
+        _fault_rsqrt=e2afs.e2afs_rsqrt,
     ),
     "esas": SqrtUnit(
         "esas",
@@ -113,7 +143,9 @@ _REGISTRY = {
 }
 
 
-def get_unit(name: str, *, kernel: bool = False) -> SqrtUnit:
+def get_unit(
+    name: str, *, kernel: bool = False, faults: Optional[FaultConfig] = None
+) -> SqrtUnit:
     try:
         unit = _REGISTRY[name]
     except KeyError:
@@ -121,6 +153,8 @@ def get_unit(name: str, *, kernel: bool = False) -> SqrtUnit:
     if kernel:
         unit._use_kernel(True)  # validate the route exists
         unit = dataclasses.replace(unit, kernel_default=True)
+    if faults is not None and faults.targets_sqrt:
+        unit = dataclasses.replace(unit, faults=faults)
     return unit
 
 

@@ -31,6 +31,18 @@ request per dispatch (``lm.prefill_into_slots`` itself is batch-k, but a
 fixed admit width of 1 keeps the compile set to one trace per prompt-length
 bucket — draw lengths from a small bucket set, as ``engine_bench`` does, and
 ``warmup`` covers them all off the serving clock).
+
+Fault tolerance (docs/robustness.md): with ``detectors=True`` (default) the
+jitted decode chunk also reduces two per-slot health signals — a non-finite
+logit latch and a max-|logit| sentinel — riding the chunk's existing single
+host sync.  A tripped slot is quarantined: its request is re-queued for a
+bounded number of approximate-path retries, then re-served solo on the
+exact datapath (``lm.exact_twin``) — the approximate→exact degradation
+ladder.  ``Engine.run`` never raises mid-batch: every request ends in a
+:class:`Completion` with a structured ``status`` (``ok`` / ``degraded`` /
+``evicted`` / ``failed``), deadlines (global and per-request) evict with
+partial tokens, and injected dispatch failures (``faults=`` with
+``site="dispatch"``) are retried with exponential backoff.
 """
 from __future__ import annotations
 
@@ -44,6 +56,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.faults import (
+    DispatchFault,
+    DispatchFaultInjector,
+    FaultConfig,
+    logits_hook as _make_logits_hook,
+)
 from repro.distributed.constraints import axis_rules
 from repro.distributed.sharding import (
     serve_pool_shardings,
@@ -59,7 +77,15 @@ __all__ = [
     "Engine",
     "run_static_baseline",
     "solo_generate",
+    "STATUSES",
 ]
+
+# Completion.status values, in degradation order (docs/robustness.md):
+#   ok       — served on the configured (possibly approximate) datapath
+#   degraded — health detectors tripped; re-served solo on the exact datapath
+#   evicted  — deadline expiry (global or per-request); tokens are partial
+#   failed   — the exact datapath itself produced non-finite logits
+STATUSES = ("ok", "degraded", "evicted", "failed")
 
 
 def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
@@ -83,19 +109,29 @@ def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
 @dataclasses.dataclass
 class Request:
     """One serving request: ``prompt`` (s,) int32 tokens, a generation budget
-    and an arrival offset (seconds from trace start; 0 = already queued)."""
+    and an arrival offset (seconds from trace start; 0 = already queued).
+    ``deadline_s`` (optional) bounds the request's wall-clock residency,
+    measured from its *arrival*: once overdue it is evicted with whatever
+    tokens it has (status ``evicted``) instead of blocking the pool."""
 
     uid: int
     prompt: np.ndarray
     max_new_tokens: int
     arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
 class Completion:
     """A finished request: its emitted tokens plus the serving timeline
     (arrival → admission into a slot → finish, seconds from trace start).
-    ``Engine.run`` / ``run_static_baseline`` return ``{uid: Completion}``."""
+    ``Engine.run`` / ``run_static_baseline`` return ``{uid: Completion}``.
+
+    ``status`` is one of :data:`STATUSES`; ``trips`` counts how many times
+    health detectors quarantined this request before it finished.  A request
+    evicted straight from the queue (never admitted) has ``admitted_s=-1.0``
+    and empty ``tokens``.
+    """
 
     uid: int
     prompt_len: int
@@ -103,11 +139,21 @@ class Completion:
     arrival_s: float
     admitted_s: float
     finished_s: float
+    status: str = "ok"
+    trips: int = 0
 
     @property
     def latency_s(self) -> float:
         """End-to-end request latency: arrival to final token, seconds."""
         return self.finished_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class _Ticket:
+    """A queue entry: the request plus its quarantine count so far."""
+
+    req: Request
+    trips: int = 0
 
 
 class Engine:
@@ -137,19 +183,41 @@ class Engine:
                  cache_len: int = 64, quantized_kv: bool = False,
                  chunk: int = 8, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 faults: Optional[FaultConfig] = None, detectors: bool = True,
+                 logit_sentinel: float = 1e4, quarantine_retries: int = 0,
+                 max_dispatch_retries: int = 3,
+                 dispatch_backoff_s: float = 0.001):
         if num_slots < 1 or cache_len < 2 or chunk < 1:
             raise ValueError(
                 f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
                 f"(got {num_slots}, {cache_len}, {chunk})"
             )
         self.params = params
+        # sqrt-site fault schedules ride the serving config itself (hashable,
+        # so the jitted steps key their caches correctly); activation faults
+        # become a logits hook inside the decode chunk; dispatch faults stay
+        # host-side.  The degradation ladder strips all of them via exact_twin.
+        if faults is not None and faults.targets_sqrt:
+            cfg = cfg.replace(sqrt_faults=faults)
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.quantized_kv = quantized_kv
         self.chunk = chunk
         self.eos_id = eos_id
+        self.faults = faults
+        self.detectors = detectors
+        self.logit_sentinel = float(logit_sentinel)
+        self.quarantine_retries = int(quarantine_retries)
+        self.max_dispatch_retries = int(max_dispatch_retries)
+        self.dispatch_backoff_s = float(dispatch_backoff_s)
+        self._injector = (
+            DispatchFaultInjector(faults)
+            if faults is not None and faults.targets_dispatch
+            else None
+        )
+        self._hook = _make_logits_hook(faults)
         self._base_key = jax.random.PRNGKey(seed)
 
         self.mesh = mesh
@@ -198,11 +266,15 @@ class Engine:
                 keys = keys.at[slots].set(new_keys)
                 return cache, tok, pos, active, remaining, keys
 
+        hook = self._hook
+        with_health = self.detectors
+
         def decode_fn(p, c, tok, pos, act, rem, keys):
             with rules_ctx():
                 return lm.decode_slots_scan(
                     p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
                     temperature=temperature, top_k=top_k, keys=keys,
+                    with_health=with_health, logits_hook=hook,
                 )
 
         if mesh is None:
@@ -224,13 +296,17 @@ class Engine:
             )
             # toks/emitted (b, chunk) follow the slot sharding (batch over
             # data, time replicated); the carried pool state keeps its
-            # committed placement
+            # committed placement; the (b,) health signals ride the same
+            # per-slot vector sharding
+            decode_out = (sh["tok"], sh["tok"], sh["tok"], sh["vec"],
+                          sh["vec"], sh["vec"], sh["cache"])
+            if with_health:
+                decode_out = decode_out + (sh["vec"], sh["vec"])
             self._decode_j = jax.jit(
                 decode_fn,
                 donate_argnums=(1, 2, 3, 4, 5),
                 in_shardings=(self._param_sh, *pool_in),
-                out_shardings=(sh["tok"], sh["tok"], sh["tok"], sh["vec"],
-                               sh["vec"], sh["vec"], sh["cache"]),
+                out_shardings=decode_out,
             )
         self.reset()
 
@@ -260,6 +336,11 @@ class Engine:
         self._owner: list[Optional[Request]] = [None] * b
         self._emitted: list[list[int]] = [[] for _ in range(b)]
         self._admitted_s = [0.0] * b
+        self._trips = [0] * b
+        self._dispatch_faults = 0
+        self._dispatch_retries = 0
+        if self._injector is not None:
+            self._injector.reset()
 
     def warmup(self, prompt_lens):
         """Compile the admit step for each prompt-length bucket plus one
@@ -273,11 +354,34 @@ class Engine:
     # -- scheduler ----------------------------------------------------------
 
     def _validate(self, req: Request):
-        s = len(req.prompt)
-        if s < 1 or req.max_new_tokens < 1:
+        """Reject a malformed request up front — naming the request id and
+        the offending field — before it can touch any slot state."""
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1:
             raise ValueError(
-                f"request {req.uid}: need >= 1 prompt token and a generation "
-                f"budget >= 1 (got {s}, {req.max_new_tokens})"
+                f"request {req.uid}: field 'prompt' must be a 1-D token "
+                f"array (got shape {prompt.shape})"
+            )
+        if not np.issubdtype(prompt.dtype, np.integer):
+            raise ValueError(
+                f"request {req.uid}: field 'prompt' must hold integer token "
+                f"ids (got dtype {prompt.dtype})"
+            )
+        s = int(prompt.shape[0])
+        if s < 1:
+            raise ValueError(
+                f"request {req.uid}: field 'prompt' needs >= 1 prompt token "
+                f"(got {s})"
+            )
+        if not isinstance(req.max_new_tokens, (int, np.integer)) or req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.uid}: field 'max_new_tokens' needs an integer "
+                f"generation budget >= 1 (got {req.max_new_tokens!r})"
+            )
+        if req.deadline_s is not None and req.deadline_s <= 0:
+            raise ValueError(
+                f"request {req.uid}: field 'deadline_s' must be positive "
+                f"when set (got {req.deadline_s})"
             )
         if not self.cfg.is_subquadratic and s + req.max_new_tokens > self.cache_len:
             # a dense (global-attention) cache is NOT a ring: positions past
@@ -285,16 +389,37 @@ class Engine:
             # pos >= cache_len, the validity mask treats every line as live —
             # silently wrong tokens.  (Pure window/SSM stacks wrap by design.)
             raise ValueError(
-                f"request {req.uid}: prompt ({s}) + budget "
-                f"({req.max_new_tokens}) exceeds the dense cache_len "
+                f"request {req.uid}: fields 'prompt' ({s}) + 'max_new_tokens' "
+                f"budget ({req.max_new_tokens}) exceeds the dense cache_len "
                 f"({self.cache_len}); allocate a larger pool"
             )
 
-    def _admit(self, req: Request, slot: int, now: float):
+    def _dispatch(self, fn, *args):
+        """Run a jitted step under the dispatch fault schedule: an injected
+        failure raises BEFORE the call (donated pool buffers stay intact), is
+        retried with exponential backoff up to ``max_dispatch_retries``, and
+        only then escalates as :class:`DispatchFault`."""
+        if self._injector is None:
+            return fn(*args)
+        attempts = 0
+        while self._injector.should_fail():
+            attempts += 1
+            self._dispatch_faults += 1
+            if attempts > self.max_dispatch_retries:
+                raise DispatchFault(
+                    f"dispatch failed {attempts} consecutive times "
+                    f"(max_dispatch_retries={self.max_dispatch_retries})"
+                )
+            self._dispatch_retries += 1
+            time.sleep(self.dispatch_backoff_s * (2 ** (attempts - 1)))
+        return fn(*args)
+
+    def _admit(self, req: Request, slot: int, now: float, trips: int = 0):
         self._validate(req)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         (self._cache, self._tok, self._pos, self._active, self._remaining,
-         self._keys) = self._admit_j(
+         self._keys) = self._dispatch(
+            self._admit_j,
             self.params, self._cache, self._tok, self._pos, self._active,
             self._remaining, self._keys, prompt,
             np.asarray([slot], np.int32),
@@ -305,71 +430,197 @@ class Engine:
         self._owner[slot] = req
         self._emitted[slot] = []
         self._admitted_s[slot] = now
+        self._trips[slot] = trips
 
     def _decode_chunk(self):
-        (toks, emitted, self._tok, self._pos, self._active, self._remaining,
-         self._cache) = self._decode_j(
+        out = self._dispatch(
+            self._decode_j,
             self.params, self._cache, self._tok, self._pos, self._active,
             self._remaining, self._keys,
         )
-        # ONE device->host sync per chunk: tokens, emission mask and liveness
-        # come back together (three separate np.asarray round-trips measurably
-        # dominate the smoke-scale serve loop)
-        return jax.device_get((toks, emitted, self._active))
+        if self.detectors:
+            (toks, emitted, self._tok, self._pos, self._active,
+             self._remaining, self._cache, bad, mx) = out
+        else:
+            (toks, emitted, self._tok, self._pos, self._active,
+             self._remaining, self._cache) = out
+            bad = jnp.zeros((self.num_slots,), bool)
+            mx = jnp.zeros((self.num_slots,), jnp.float32)
+        # ONE device->host sync per chunk: tokens, emission mask, liveness
+        # and the health signals come back together (separate np.asarray
+        # round-trips measurably dominate the smoke-scale serve loop)
+        return jax.device_get((toks, emitted, self._active, bad, mx))
+
+    def _exact_fallback(self, req: Request):
+        """The bottom rung of the degradation ladder: serve one request solo
+        on the exact, fault-free datapath (greedy), reusing the module-level
+        static jit caches.  Returns (tokens, healthy): ``healthy=False`` when
+        even the exact path yields non-finite logits (status ``failed``)."""
+        ecfg = lm.exact_twin(self.cfg)
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        cache, _ = lm.init_cache(ecfg, 1, self.cache_len, quantized=self.quantized_kv)
+        logits, cache = _static_prefill_jit(ecfg)(self.params, cache, prompt)
+        last = np.asarray(logits[:, -1].astype(jnp.float32))
+        if not np.isfinite(last).all():
+            return np.zeros(0, np.int32), False
+        tok = jnp.argmax(logits[:, -1:], axis=-1)
+        toks, _, _ = _static_gen_jit(ecfg, req.max_new_tokens)(
+            self.params, cache, tok, jnp.int32(prompt.shape[1])
+        )
+        out = np.asarray(toks)[0]
+        if self.eos_id is not None:  # slot-path semantics: EOS emitted, then stop
+            hits = np.nonzero(out == self.eos_id)[0]
+            if hits.size:
+                out = out[: hits[0] + 1]
+        return out.astype(np.int32), True
 
     def run(self, requests, *, deadline_s: float = 600.0) -> dict:
         """Serve ``requests`` (admitted no earlier than their ``arrival_s``,
         measured on the wall clock from call start) until all complete.
-        Returns {uid: Completion} plus aggregate stats under ``self.stats``.
+        Returns {uid: Completion} — one per request, each with a structured
+        ``status`` — plus aggregate stats and fault/recovery counters under
+        ``self.stats``; nothing raises mid-batch.
+
+        Deadlines degrade gracefully rather than raising: when the global
+        ``deadline_s`` expires, in-flight requests are evicted with their
+        partial tokens and still-queued ones with empty tokens (status
+        ``evicted``, ``admitted_s=-1.0`` if never admitted).  A request's own
+        ``deadline_s`` (relative to its arrival) evicts just that request.
+
+        With detectors on, a slot whose chunk tripped the health checks
+        (non-finite logits, or max |logit| above ``logit_sentinel``) is
+        quarantined: its emissions are discarded and the request re-queued
+        for up to ``quarantine_retries`` fresh approximate-path attempts,
+        after which it is re-served on the exact datapath (status
+        ``degraded``; ``failed`` if even that is unhealthy).
         """
         requests = list(requests)
         for req in requests:
             # validate the whole trace BEFORE serving starts: a bad request
             # surfacing mid-trace would abandon every in-flight completion
             self._validate(req)
-        queue = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        queue = deque(
+            _Ticket(r) for r in sorted(requests, key=lambda r: (r.arrival_s, r.uid))
+        )
         done: dict[int, Completion] = {}
+        counters = {
+            "faults_detected": 0,
+            "quarantine_retries": 0,
+            "exact_fallbacks": 0,
+            "deadline_evictions": 0,
+        }
         t0 = time.perf_counter()
         decode_chunks = 0
+        expired = False
+
+        def finish(req, tokens, status, now, admitted_s, trips=0):
+            done[req.uid] = Completion(
+                uid=req.uid,
+                prompt_len=len(req.prompt),
+                tokens=np.asarray(tokens, np.int32),
+                arrival_s=req.arrival_s,
+                admitted_s=admitted_s,
+                finished_s=now,
+                status=status,
+                trips=trips,
+            )
+
+        def overdue(req, now):
+            return req.deadline_s is not None and now > req.arrival_s + req.deadline_s
+
         while queue or any(o is not None for o in self._owner):
             now = time.perf_counter() - t0
             if now > deadline_s:
-                raise TimeoutError(f"engine exceeded deadline ({deadline_s}s)")
+                expired = True
+                break
+            # evict overdue queued requests before they can take a slot
+            if any(overdue(t.req, now) for t in queue):
+                kept = deque()
+                for t in queue:
+                    if overdue(t.req, now):
+                        counters["deadline_evictions"] += 1
+                        finish(t.req, [], "evicted", now, -1.0, t.trips)
+                    else:
+                        kept.append(t)
+                queue = kept
             # admit queued arrivals into free slots
             for slot in range(self.num_slots):
-                if self._owner[slot] is None and queue and queue[0].arrival_s <= now:
-                    self._admit(queue.popleft(), slot, now)
+                if self._owner[slot] is None and queue and queue[0].req.arrival_s <= now:
+                    t = queue.popleft()
+                    self._admit(t.req, slot, now, trips=t.trips)
             if not any(o is not None for o in self._owner):
                 # pool idle: sleep until the next arrival
                 if queue:
-                    time.sleep(max(0.0, queue[0].arrival_s - now))
+                    time.sleep(max(0.0, queue[0].req.arrival_s - now))
                 continue
-            toks, emitted, active = self._decode_chunk()
+            toks, emitted, active, bad, mx = self._decode_chunk()
             decode_chunks += 1
             now = time.perf_counter() - t0
             for slot in range(self.num_slots):
                 req = self._owner[slot]
                 if req is None:
                     continue
+                # NaN mx compares False, but `bad` has latched in that case
+                tripped = self.detectors and (
+                    bool(bad[slot]) or float(mx[slot]) > self.logit_sentinel
+                )
+                if tripped:
+                    # quarantine: drop the slot (its device row decays
+                    # harmlessly — row isolation + budget exhaustion) and
+                    # discard every emission; the retry starts clean
+                    counters["faults_detected"] += 1
+                    trips = self._trips[slot] + 1
+                    self._owner[slot] = None
+                    if trips <= self.quarantine_retries:
+                        counters["quarantine_retries"] += 1
+                        queue.appendleft(_Ticket(req, trips))
+                    else:
+                        counters["exact_fallbacks"] += 1
+                        tokens, healthy = self._exact_fallback(req)
+                        now = time.perf_counter() - t0
+                        finish(req, tokens, "degraded" if healthy else "failed",
+                               now, self._admitted_s[slot], trips)
+                    continue
                 self._emitted[slot].extend(toks[slot][emitted[slot]].tolist())
                 if not active[slot]:  # finished: free the slot for reuse
-                    done[req.uid] = Completion(
-                        uid=req.uid,
-                        prompt_len=len(req.prompt),
-                        tokens=np.asarray(self._emitted[slot], np.int32),
-                        arrival_s=req.arrival_s,
-                        admitted_s=self._admitted_s[slot],
-                        finished_s=now,
-                    )
+                    finish(req, self._emitted[slot], "ok", now,
+                           self._admitted_s[slot], self._trips[slot])
                     self._owner[slot] = None
+                elif overdue(req, now):  # per-request deadline: partial out
+                    counters["deadline_evictions"] += 1
+                    finish(req, self._emitted[slot], "evicted", now,
+                           self._admitted_s[slot], self._trips[slot])
+                    self._owner[slot] = None
+        if expired:
+            now = time.perf_counter() - t0
+            for slot in range(self.num_slots):
+                req = self._owner[slot]
+                if req is None:
+                    continue
+                counters["deadline_evictions"] += 1
+                finish(req, self._emitted[slot], "evicted", now,
+                       self._admitted_s[slot], self._trips[slot])
+                self._owner[slot] = None
+            for t in queue:
+                counters["deadline_evictions"] += 1
+                finish(t.req, [], "evicted", now, -1.0, t.trips)
+            queue.clear()
         makespan = time.perf_counter() - t0
         total_tokens = sum(len(c.tokens) for c in done.values())
+        by_status = {s: 0 for s in STATUSES}
+        for c in done.values():
+            by_status[c.status] += 1
         self.stats = {
             "makespan_s": makespan,
             "total_tokens": total_tokens,
             "tok_s": total_tokens / max(makespan, 1e-9),
             "decode_chunks": decode_chunks,
             "n_requests": len(done),
+            "deadline_expired": expired,
+            "dispatch_faults": self._dispatch_faults,
+            "dispatch_retries": self._dispatch_retries,
+            **counters,
+            **{f"n_{s}": by_status[s] for s in STATUSES},
         }
         return done
 

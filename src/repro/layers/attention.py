@@ -50,8 +50,8 @@ def _project_qkv(p, cfg, xq, xkv, q_positions, kv_positions, *, use_rope):
     k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
     v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
     if cfg.qk_norm:
-        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit)
-        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit)
+        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
+        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
     if use_rope:
         q = apply_rope(q, q_positions, theta=cfg.rope_theta)
         k = apply_rope(k, kv_positions, theta=cfg.rope_theta)
@@ -534,14 +534,14 @@ def precompute_cross_kv(p, cfg, enc_out):
     k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(enc_out.dtype))
     v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(enc_out.dtype))
     if cfg.qk_norm:
-        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit)
+        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
     return {"ck": k, "cv": v}
 
 
 def cross_attention_decode(p, cfg, x, cross_kv):
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
     if cfg.qk_norm:
-        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit)
+        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
     scale = cfg.d_head**-0.5
     scores = _gqa_scores(q, cross_kv["ck"]).astype(jnp.float32) * scale
     w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)

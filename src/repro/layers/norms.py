@@ -21,17 +21,24 @@ def rmsnorm_init(ini: DenseInit, name: str, d: int):
     ini.add(name, (d,), ("embed",), init=zeros)
 
 
-def rmsnorm(scale, x, *, sqrt_unit: str = "exact", eps: float = 1e-6, fused: bool = False):
+def rmsnorm(
+    scale, x, *, sqrt_unit: str = "exact", eps: float = 1e-6, fused: bool = False, faults=None
+):
     """``fused=True`` routes the whole norm through the Pallas RMSNorm kernel
     (one HBM read/write, rsqrt in-register) via the kernel dispatch layer;
-    only the "e2afs" unit has a fused datapath."""
+    only the "e2afs" unit has a fused datapath.  ``faults`` threads a seeded
+    sqrt-site :class:`~repro.core.faults.FaultConfig` into the unit (the
+    fused kernel has no in-register injection hook, so the two are exclusive).
+    """
     if fused:
         if sqrt_unit != "e2afs":
             raise ValueError(f"fused rmsnorm requires sqrt_unit='e2afs', got {sqrt_unit!r}")
+        if faults is not None and faults.targets_sqrt and faults.rate > 0.0:
+            raise ValueError("fused rmsnorm has no fault-injection hook; use fused=False")
         from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_kernel
 
         return rmsnorm_kernel(x, scale.astype(jnp.float32), eps=eps)
-    unit = get_unit(sqrt_unit)
+    unit = get_unit(sqrt_unit, faults=faults)
     dt = x.dtype
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
@@ -44,8 +51,8 @@ def layernorm_init(ini: DenseInit, name: str, d: int):
     ini.add(f"{name}_bias", (d,), ("embed",), init=zeros)
 
 
-def layernorm(scale, bias, x, *, sqrt_unit: str = "exact", eps: float = 1e-5):
-    unit = get_unit(sqrt_unit)
+def layernorm(scale, bias, x, *, sqrt_unit: str = "exact", eps: float = 1e-5, faults=None):
+    unit = get_unit(sqrt_unit, faults=faults)
     dt = x.dtype
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)

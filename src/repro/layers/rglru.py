@@ -45,7 +45,7 @@ def _gates(p, cfg, xr):
     log_a_base = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32))  # (dr,) < 0
     log_a = r * log_a_base  # (..., dr)
     a = jnp.exp(log_a)
-    unit = get_unit(cfg.sqrt_unit)
+    unit = get_unit(cfg.sqrt_unit, faults=cfg.sqrt_faults)
     norm = unit.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
     return a, norm * i * xr.astype(jnp.float32)
 

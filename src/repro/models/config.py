@@ -2,7 +2,10 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
+
+if TYPE_CHECKING:
+    from repro.core.faults import FaultConfig
 
 __all__ = ["ModelConfig", "MoESpec", "SSMSpec", "RGLRUSpec", "EncoderSpec"]
 
@@ -68,6 +71,9 @@ class ModelConfig:
     # traffic of the XLA (non-Pallas) attention path (§Perf prefill study)
     scores_dtype: str = "float32"
     sqrt_unit: str = "exact"
+    # seeded fault schedule for the sqrt datapath (core/faults.py); frozen/
+    # hashable so configs carrying it still key jit caches.  None = clean.
+    sqrt_faults: Optional["FaultConfig"] = None
     remat: str = "block"  # "none" | "block" | "minimal"
     # decode-attention route for the serving hot loop: None = inline XLA
     # path; "fused" = the Pallas decode-attention kernel via the dispatch

@@ -73,8 +73,18 @@ def _norm_init(ini, name, cfg):
 
 def _norm(p, name, x, cfg):
     if cfg.norm == "rmsnorm":
-        return rmsnorm(p[name], x, sqrt_unit=cfg.sqrt_unit)
-    return layernorm(p[f"{name}_scale"], p[f"{name}_bias"], x, sqrt_unit=cfg.sqrt_unit)
+        return rmsnorm(p[name], x, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
+    return layernorm(
+        p[f"{name}_scale"], p[f"{name}_bias"], x, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults
+    )
+
+
+def exact_twin(cfg: ModelConfig) -> ModelConfig:
+    """The exact-datapath, fault-free twin of a config — the bottom rung of
+    the engine's approximate→exact degradation ladder (docs/robustness.md)."""
+    if cfg.sqrt_unit == "exact" and cfg.sqrt_faults is None:
+        return cfg
+    return cfg.replace(sqrt_unit="exact", sqrt_faults=None)
 
 
 # ---------------------------------------------------------------------------
@@ -775,7 +785,8 @@ def sample_tokens(logits, pos, keys, temperature, top_k):
 def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
                       remaining, n_steps: int, *, eos_id=None,
                       temperature: float = 0.0, top_k: int = 0, keys=None,
-                      cross_kv=None, mesh=None, rules=None):
+                      cross_kv=None, mesh=None, rules=None,
+                      with_health: bool = False, logits_hook=None):
     """Slot-scheduled decode: ``n_steps`` decode_steps under one ``lax.scan``
     where every batch row is an independent request.
 
@@ -803,6 +814,16 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
     inside an ``axis_rules`` scope so each step's constraints bind batch to
     the data axes and heads/vocab to 'model' — the chunk stays ONE dispatch
     on the mesh (the scan carries the sharded pool, no per-step host trips).
+
+    ``with_health=True`` appends two per-slot health signals to the return
+    tuple — ``bad`` (b,) bool: some decode step of this chunk produced a
+    non-finite logit while the slot was active; ``mx`` (b,) f32: the max
+    |logit| seen while active (the engine's magnitude sentinel) — computed
+    as two cheap row reductions inside the same scan, riding the chunk's
+    existing single host sync (docs/robustness.md).  ``logits_hook``
+    (fp32 logits -> fp32 logits) is applied to each step's last-position
+    logits before health/sampling — the fault model's activation-injection
+    point; detectors see exactly what sampling sees.
     """
     if mesh is not None:
         if rules is None:
@@ -814,6 +835,7 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
                 params, cfg, cache, tok, pos, active, remaining, n_steps,
                 eos_id=eos_id, temperature=temperature, top_k=top_k,
                 keys=keys, cross_kv=cross_kv,
+                with_health=with_health, logits_hook=logits_hook,
             )
     pos = jnp.asarray(pos, jnp.int32)
     active = jnp.asarray(active, bool)
@@ -825,11 +847,22 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
         )
 
     def step(carry, _):
-        cache, tok, pos, active, remaining = carry
+        if with_health:
+            cache, tok, pos, active, remaining, bad, mx = carry
+        else:
+            cache, tok, pos, active, remaining = carry
         logits, cache = decode_step(params, cfg, cache, tok, pos, cross_kv=cross_kv)
-        nxt = sample_tokens(
-            logits[:, -1].astype(jnp.float32), pos, keys, temperature, top_k
-        )
+        lg = logits[:, -1].astype(jnp.float32)
+        if logits_hook is not None:
+            lg = logits_hook(lg)
+        if with_health:
+            finite = jnp.all(jnp.isfinite(lg), axis=-1)
+            bad = bad | (active & ~finite)
+            # a NaN row makes mx NaN from here on; harmless — `bad` has
+            # already latched for that slot and is the authoritative signal
+            step_mx = jnp.max(jnp.abs(lg), axis=-1)
+            mx = jnp.maximum(mx, jnp.where(active, step_mx, 0.0))
+        nxt = sample_tokens(lg, pos, keys, temperature, top_k)
         fed = tok[:, 0]
         remaining = remaining - active.astype(jnp.int32)
         still = active & (remaining > 0)
@@ -837,7 +870,28 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
             still = still & (fed != eos_id)
         new_pos = pos + active.astype(jnp.int32)
         new_tok = jnp.where(active[:, None], nxt[:, None], tok)
+        if with_health:
+            return (cache, new_tok, new_pos, still, remaining, bad, mx), (fed, active)
         return (cache, new_tok, new_pos, still, remaining), (fed, active)
+
+    if with_health:
+        bad0 = jnp.zeros(tok.shape[0], bool)
+        mx0 = jnp.zeros(tok.shape[0], jnp.float32)
+        carry0 = (cache, tok, pos, active, remaining, bad0, mx0)
+        (cache, tok, pos, active, remaining, bad, mx), (toks, emitted) = jax.lax.scan(
+            step, carry0, None, length=n_steps
+        )
+        return (
+            jnp.moveaxis(toks, 0, 1),
+            jnp.moveaxis(emitted, 0, 1),
+            tok,
+            pos,
+            active,
+            remaining,
+            cache,
+            bad,
+            mx,
+        )
 
     (cache, tok, pos, active, remaining), (toks, emitted) = jax.lax.scan(
         step, (cache, tok, pos, active, remaining), None, length=n_steps

@@ -1,0 +1,144 @@
+"""Unit tests for the deterministic fault model (core/faults.py): schedule
+replayability, rate scaling, field targeting, specials routing, unit/kernel
+threading, and the host-side dispatch injector."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FaultConfig, available_units, e2afs_rsqrt, e2afs_sqrt, get_unit
+from repro.core.faults import (
+    DispatchFaultInjector,
+    corrupt_logits,
+    fault_mask,
+    flip_float_bits,
+    logits_hook,
+)
+from repro.core.numerics import FP32, decompose
+
+
+def _x(n=4096, dtype=jnp.float32):
+    return jnp.linspace(0.5, 100.0, n, dtype=dtype)
+
+
+def test_fault_config_validates():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultConfig("bogus", 0.1)
+    with pytest.raises(ValueError, match="rate"):
+        FaultConfig("sqrt_man", 1.5)
+    assert FaultConfig("sqrt_man", 0.1).targets_sqrt
+    assert FaultConfig("logit_inf", 0.1).targets_logits
+    assert FaultConfig("dispatch", 0.1).targets_dispatch
+
+
+def test_fault_mask_replayable_and_rate_scaled():
+    bits = jnp.arange(1 << 16, dtype=jnp.uint32)
+    for rate in (0.01, 0.1):
+        m1 = np.asarray(fault_mask(bits, rate, seed=7))
+        m2 = np.asarray(fault_mask(bits, rate, seed=7))
+        np.testing.assert_array_equal(m1, m2)
+        # hash-uniformity: observed strike rate within 3 sigma of the target
+        n = bits.size
+        sigma = (rate * (1 - rate) / n) ** 0.5
+        assert abs(m1.mean() - rate) < 3 * sigma
+    # different seeds give different schedules
+    assert (
+        np.asarray(fault_mask(bits, 0.1, seed=1))
+        != np.asarray(fault_mask(bits, 0.1, seed=2))
+    ).any()
+    # zero rate is exactly the identity
+    assert not np.asarray(fault_mask(bits, 0.0, seed=1)).any()
+
+
+def test_sqrt_fault_injection_deterministic_and_field_targeted():
+    x = _x()
+    clean = e2afs_sqrt(x)
+    cfg = FaultConfig("sqrt_man", rate=0.05, seed=3)
+    f1, f2 = e2afs_sqrt(x, faults=cfg), e2afs_sqrt(x, faults=cfg)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    struck = np.asarray(f1 != clean)
+    assert 0 < struck.sum() < x.size
+    # mantissa strikes never touch the exponent field
+    _, ec, _ = decompose(clean, FP32)
+    _, ef, _ = decompose(f1, FP32)
+    np.testing.assert_array_equal(np.asarray(ec), np.asarray(ef))
+    # exponent strikes never touch the mantissa field
+    g = e2afs_sqrt(x, faults=FaultConfig("sqrt_exp", rate=0.05, seed=3, bit=0))
+    _, _, mc = decompose(clean, FP32)
+    _, _, mg = decompose(g, FP32)
+    np.testing.assert_array_equal(np.asarray(mc), np.asarray(mg))
+    assert np.asarray(g != clean).any()
+
+
+def test_pinned_bit_flip_is_exact_xor():
+    x = _x(1024)
+    clean = e2afs_sqrt(x)
+    f = e2afs_sqrt(x, faults=FaultConfig("sqrt_man", rate=1.0, seed=0, bit=4))
+    _, _, mc = decompose(clean, FP32)
+    _, _, mf = decompose(f, FP32)
+    np.testing.assert_array_equal(np.asarray(mc ^ (1 << 4)), np.asarray(mf))
+
+
+def test_specials_still_route_under_full_fault_rate():
+    sp = jnp.array([0.0, -0.0, -1.0, jnp.inf, -jnp.inf, jnp.nan], jnp.float32)
+    out = np.asarray(e2afs_sqrt(sp, faults=FaultConfig("sqrt_man", 1.0, seed=0)))
+    assert out[0] == 0.0 and out[1] == 0.0
+    assert np.isnan(out[2]) and np.isposinf(out[3])
+    assert np.isnan(out[4]) and np.isnan(out[5])
+    r = np.asarray(e2afs_rsqrt(sp, faults=FaultConfig("sqrt_exp", 1.0, seed=0)))
+    assert np.isposinf(r[0]) and np.isposinf(r[1])
+    assert np.isnan(r[2]) and r[3] == 0.0
+
+
+@pytest.mark.parametrize("name", available_units())
+def test_every_unit_accepts_fault_config(name):
+    """get_unit(faults=) must perturb every unit — native hook for e2afs,
+    output-register flips for the rest — deterministically."""
+    x = _x(2048)
+    cfg = FaultConfig("sqrt_man", rate=0.1, seed=11)
+    clean = np.asarray(get_unit(name).sqrt(x))
+    f1 = np.asarray(get_unit(name, faults=cfg).sqrt(x))
+    f2 = np.asarray(get_unit(name, faults=cfg).sqrt(x))
+    np.testing.assert_array_equal(f1, f2)
+    assert (f1 != clean).any()
+    # rsqrt path too (native or composed)
+    rc = np.asarray(get_unit(name).rsqrt(x))
+    rf = np.asarray(get_unit(name, faults=cfg).rsqrt(x))
+    assert (rf != rc).any()
+
+
+def test_non_sqrt_sites_leave_units_clean():
+    x = _x(512)
+    for site in ("logit_nan", "logit_inf", "dispatch"):
+        cfg = FaultConfig(site, rate=1.0, seed=0)
+        np.testing.assert_array_equal(
+            np.asarray(get_unit("e2afs", faults=cfg).sqrt(x)),
+            np.asarray(get_unit("e2afs").sqrt(x)),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(flip_float_bits(x, cfg)), np.asarray(x)
+        )
+
+
+def test_corrupt_logits_and_hook():
+    lg = jnp.ones((4, 256), jnp.float32)
+    nan_cfg = FaultConfig("logit_nan", 0.02, seed=1)
+    c1, c2 = corrupt_logits(lg, nan_cfg), corrupt_logits(lg, nan_cfg)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    assert 0 < int(np.isnan(np.asarray(c1)).sum()) < lg.size
+    inf = corrupt_logits(lg, FaultConfig("logit_inf", 0.02, seed=1))
+    assert int(np.isposinf(np.asarray(inf)).sum()) > 0
+    # hook factory: callable only for activation sites
+    assert logits_hook(None) is None
+    assert logits_hook(FaultConfig("sqrt_man", 0.5)) is None
+    hook = logits_hook(nan_cfg)
+    np.testing.assert_array_equal(np.asarray(hook(lg)), np.asarray(c1))
+
+
+def test_dispatch_injector_replays_and_validates():
+    with pytest.raises(ValueError, match="dispatch"):
+        DispatchFaultInjector(FaultConfig("sqrt_man", 0.5))
+    inj = DispatchFaultInjector(FaultConfig("dispatch", 0.3, seed=9))
+    a = [inj.should_fail() for _ in range(64)]
+    inj.reset()
+    b = [inj.should_fail() for _ in range(64)]
+    assert a == b and any(a) and not all(a)

@@ -1,91 +1,191 @@
-"""Hypothesis property tests for the approximate sqrt units."""
-import numpy as np
-import jax.numpy as jnp
-import pytest
+"""Property tests for the approximate sqrt units.
 
-pytest.importorskip("hypothesis", reason="install .[test] extras for property tests")
-from hypothesis import given, settings, strategies as st
+Two lanes:
+
+* a fast, always-on special-value contract — every unit's handling of 0,
+  subnormals, ±Inf, NaN and negative inputs is pinned here (the IEEE policy
+  of ``numerics.apply_specials`` plus the rsqrt overrides), so no unit can
+  silently produce garbage on edge inputs;
+* Hypothesis property tests (slow lane, skipped when hypothesis is absent)
+  for error bounds and structural invariants of the datapaths.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.core import available_units, get_unit
 
-pytestmark = pytest.mark.slow
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # fast lane still runs the special-value contract
+    HAVE_HYPOTHESIS = False
 
 FP16_MIN_NORMAL = float(np.float16(6.104e-05))  # 2^-14
-finite_pos_f16 = st.floats(
-    min_value=FP16_MIN_NORMAL,
-    max_value=65024.0,
-    allow_nan=False,
-    allow_infinity=False,
-    width=16,
-)
+
+APPROX_UNITS = tuple(n for n in available_units() if n != "exact")
+DTYPES = (jnp.float16, jnp.float32)
 
 
-def _as16(v):
-    return jnp.asarray([np.float16(v)])
+def _one(unit_fn, value, dtype):
+    return float(unit_fn(jnp.asarray([value], dtype))[0])
 
 
-@settings(max_examples=300, deadline=None)
-@given(x=finite_pos_f16)
-def test_e2afs_bounded_relative_error(x):
-    """Worst-case relative error of the E2AFS datapath is < 6.1% (the
-    odd-r, Y=0 corner: 1.5/sqrt(2) - 1 = 6.066%)."""
-    y = float(get_unit("e2afs").sqrt(_as16(x))[0])
-    ref = float(np.sqrt(np.float64(x)))
-    assert abs(y - ref) / ref < 0.0612
+def _subnormal(dtype):
+    # largest subnormal of the format: all-mantissa, zero exponent
+    return float(np.finfo(np.dtype(dtype)).smallest_normal) * 0.5
 
 
-@settings(max_examples=300, deadline=None)
-@given(x=finite_pos_f16)
-def test_scale_by_four_equivariance(x):
-    """sqrt(4x) == 2*sqrt(x) exactly in the datapath: x4 keeps exponent
-    parity and mantissa, so the output differs only by one exponent step."""
-    unit = get_unit("e2afs")
-    x16 = np.float16(x)
-    if float(x16) * 4.0 > 60000.0 or float(x16) == 0.0:
-        return
-    y1 = float(unit.sqrt(_as16(x16))[0])
-    y4 = float(unit.sqrt(_as16(np.float16(float(x16) * 4.0)))[0])
-    assert y4 == 2.0 * y1
+# ---------------------------------------------------------------------------
+# Special-value contract (fast lane) — docs/robustness.md §Numerics contract
+# ---------------------------------------------------------------------------
 
 
-@settings(max_examples=200, deadline=None)
-@given(x=finite_pos_f16)
-def test_all_units_positive_finite(x):
-    for name in available_units():
-        y = float(get_unit(name).sqrt(_as16(x))[0])
-        assert np.isfinite(y) and y > 0.0
+@pytest.mark.parametrize("name", available_units())
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sqrt_special_values(name, dtype):
+    """Every unit: sqrt(±0)=+0, sqrt(+inf)=+inf, sqrt(-inf)=sqrt(NaN)=
+    sqrt(negative)=NaN.  No silent garbage on any special input."""
+    sqrt = get_unit(name).sqrt
+    assert _one(sqrt, 0.0, dtype) == 0.0
+    assert _one(sqrt, -0.0, dtype) == 0.0
+    assert np.isposinf(_one(sqrt, np.inf, dtype))
+    assert np.isnan(_one(sqrt, -np.inf, dtype))
+    assert np.isnan(_one(sqrt, np.nan, dtype))
+    assert np.isnan(_one(sqrt, -1.0, dtype))
 
 
-@settings(max_examples=200, deadline=None)
-@given(x=finite_pos_f16)
-def test_rsqrt_consistent_with_sqrt(x):
-    """E2AFS-R output stays within 7% of 1/sqrt."""
-    y = float(get_unit("e2afs").rsqrt(_as16(x))[0])
-    ref = 1.0 / float(np.sqrt(np.float64(x)))
-    assert abs(y - ref) / ref < 0.07
+@pytest.mark.parametrize("name", APPROX_UNITS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sqrt_flushes_subnormals_to_zero(name, dtype):
+    """Approximate units are ftz (hardware-faithful): positive subnormal
+    inputs flush to +0, never to a garbage normal, and negative subnormals
+    are NaN like any other negative.  (The exact unit is exempt: XLA's own
+    sqrt flushes subnormals backend-dependently.)"""
+    y = _one(get_unit(name).sqrt, _subnormal(dtype), dtype)
+    assert y == 0.0 and not np.signbit(y)
+    assert np.isnan(_one(get_unit(name).sqrt, -_subnormal(dtype), dtype))
 
 
-@settings(max_examples=200, deadline=None)
-@given(x=st.floats(min_value=1e-30, max_value=1e30, allow_nan=False))
-def test_generalized_fp32_bounded_error(x):
-    """The bf16/fp32 generalization keeps the same worst-case bound."""
-    y = float(get_unit("e2afs").sqrt(jnp.asarray([x], jnp.float32))[0])
-    ref = float(np.sqrt(np.float64(np.float32(x))))
-    assert abs(y - ref) / ref < 0.0612
+@pytest.mark.parametrize("name", available_units())
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rsqrt_special_values(name, dtype):
+    """Every unit: rsqrt(+0)=+inf, rsqrt(+inf)=+0, rsqrt(NaN)=
+    rsqrt(negative)=NaN — whether the rsqrt is a native datapath (e2afs,
+    exact) or composed as 1/sqrt (esas, cwaha)."""
+    rsqrt = get_unit(name).rsqrt
+    assert np.isposinf(_one(rsqrt, 0.0, dtype))
+    assert _one(rsqrt, np.inf, dtype) == 0.0
+    assert np.isnan(_one(rsqrt, np.nan, dtype))
+    assert np.isnan(_one(rsqrt, -1.0, dtype))
+    assert np.isnan(_one(rsqrt, -np.inf, dtype))
 
 
-@settings(max_examples=100, deadline=None)
-@given(
-    x=st.floats(min_value=FP16_MIN_NORMAL, max_value=60000.0, allow_nan=False, width=16),
-    scale=st.sampled_from([0.25, 4.0, 16.0, 64.0]),
-)
-def test_monotone_across_octave_pairs(x, scale):
-    """Although the PWL breaks local monotonicity at region boundaries,
-    scaling the input up always scales the output up."""
-    unit = get_unit("e2afs")
-    x2 = float(np.float16(x)) * scale
-    if not (FP16_MIN_NORMAL < x2 < 60000.0):
-        return
-    y1 = float(unit.sqrt(_as16(x))[0])
-    y2 = float(unit.sqrt(_as16(x2))[0])
-    assert (y2 > y1) == (scale > 1.0)
+@pytest.mark.parametrize("name", APPROX_UNITS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rsqrt_subnormal_is_inf_not_zero(name, dtype):
+    """Under ftz a positive subnormal is zero to the datapath, so rsqrt
+    must yield +inf — NOT a silent 0 (the flushed-sqrt output leaking
+    through the reciprocal unguarded).  Regression-pins the E2AFS-R
+    specials override."""
+    assert np.isposinf(_one(get_unit(name).rsqrt, _subnormal(dtype), dtype))
+
+
+@pytest.mark.parametrize("name", available_units())
+def test_normal_inputs_stay_finite_positive(name):
+    """Sanity floor for the contract: across the whole normal range neither
+    sqrt nor rsqrt produces a non-finite or non-positive value."""
+    x = jnp.asarray(np.logspace(-4.5, 4.5, 513), jnp.float32)
+    unit = get_unit(name)
+    for y in (unit.sqrt(x), unit.rsqrt(x)):
+        y = np.asarray(y)
+        assert np.isfinite(y).all() and (y > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis lane (slow) — error bounds and structural invariants
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    slow = pytest.mark.slow
+
+    finite_pos_f16 = st.floats(
+        min_value=FP16_MIN_NORMAL,
+        max_value=65024.0,
+        allow_nan=False,
+        allow_infinity=False,
+        width=16,
+    )
+
+    def _as16(v):
+        return jnp.asarray([np.float16(v)])
+
+    @slow
+    @settings(max_examples=300, deadline=None)
+    @given(x=finite_pos_f16)
+    def test_e2afs_bounded_relative_error(x):
+        """Worst-case relative error of the E2AFS datapath is < 6.1% (the
+        odd-r, Y=0 corner: 1.5/sqrt(2) - 1 = 6.066%)."""
+        y = float(get_unit("e2afs").sqrt(_as16(x))[0])
+        ref = float(np.sqrt(np.float64(x)))
+        assert abs(y - ref) / ref < 0.0612
+
+    @slow
+    @settings(max_examples=300, deadline=None)
+    @given(x=finite_pos_f16)
+    def test_scale_by_four_equivariance(x):
+        """sqrt(4x) == 2*sqrt(x) exactly in the datapath: x4 keeps exponent
+        parity and mantissa, so the output differs only by one exponent step."""
+        unit = get_unit("e2afs")
+        x16 = np.float16(x)
+        if float(x16) * 4.0 > 60000.0 or float(x16) == 0.0:
+            return
+        y1 = float(unit.sqrt(_as16(x16))[0])
+        y4 = float(unit.sqrt(_as16(np.float16(float(x16) * 4.0)))[0])
+        assert y4 == 2.0 * y1
+
+    @slow
+    @settings(max_examples=200, deadline=None)
+    @given(x=finite_pos_f16)
+    def test_all_units_positive_finite(x):
+        for name in available_units():
+            y = float(get_unit(name).sqrt(_as16(x))[0])
+            assert np.isfinite(y) and y > 0.0
+
+    @slow
+    @settings(max_examples=200, deadline=None)
+    @given(x=finite_pos_f16)
+    def test_rsqrt_consistent_with_sqrt(x):
+        """E2AFS-R output stays within 7% of 1/sqrt."""
+        y = float(get_unit("e2afs").rsqrt(_as16(x))[0])
+        ref = 1.0 / float(np.sqrt(np.float64(x)))
+        assert abs(y - ref) / ref < 0.07
+
+    @slow
+    @settings(max_examples=200, deadline=None)
+    @given(x=st.floats(min_value=1e-30, max_value=1e30, allow_nan=False))
+    def test_generalized_fp32_bounded_error(x):
+        """The bf16/fp32 generalization keeps the same worst-case bound."""
+        y = float(get_unit("e2afs").sqrt(jnp.asarray([x], jnp.float32))[0])
+        ref = float(np.sqrt(np.float64(np.float32(x))))
+        assert abs(y - ref) / ref < 0.0612
+
+    @slow
+    @settings(max_examples=100, deadline=None)
+    @given(
+        x=st.floats(
+            min_value=FP16_MIN_NORMAL, max_value=60000.0, allow_nan=False, width=16
+        ),
+        scale=st.sampled_from([0.25, 4.0, 16.0, 64.0]),
+    )
+    def test_monotone_across_octave_pairs(x, scale):
+        """Although the PWL breaks local monotonicity at region boundaries,
+        scaling the input up always scales the output up."""
+        unit = get_unit("e2afs")
+        x2 = float(np.float16(x)) * scale
+        if not (FP16_MIN_NORMAL < x2 < 60000.0):
+            return
+        y1 = float(unit.sqrt(_as16(x))[0])
+        y2 = float(unit.sqrt(_as16(x2))[0])
+        assert (y2 > y1) == (scale > 1.0)

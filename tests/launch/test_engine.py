@@ -97,6 +97,70 @@ def test_engine_rejects_bad_requests(setup):
         eng.run([Request(uid=0, prompt=np.zeros(2, np.int32), max_new_tokens=0)])
 
 
+def test_engine_validation_names_request_and_field(setup):
+    """Malformed requests are rejected up front — before any slot state is
+    touched — with the offending request id and field in the message, even
+    when the bad request hides behind valid ones."""
+    cfg, params = setup
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=2)
+    good = Request(uid=1, prompt=np.arange(3, dtype=np.int32), max_new_tokens=2)
+    cases = [
+        (Request(uid=42, prompt=np.zeros((2, 2), np.int32), max_new_tokens=2),
+         r"request 42: field 'prompt'.*1-D"),
+        (Request(uid=43, prompt=np.zeros(3, np.float32), max_new_tokens=2),
+         r"request 43: field 'prompt'.*integer"),
+        (Request(uid=44, prompt=np.arange(3, dtype=np.int32), max_new_tokens=2.5),
+         r"request 44: field 'max_new_tokens'"),
+        (Request(uid=45, prompt=np.arange(3, dtype=np.int32), max_new_tokens=2,
+                 deadline_s=-1.0),
+         r"request 45: field 'deadline_s'"),
+    ]
+    for bad, pattern in cases:
+        with pytest.raises(ValueError, match=pattern):
+            eng.run([good, bad])
+        # whole-trace validation failed before serving: no slot was touched
+        assert all(o is None for o in eng._owner)
+        assert not any(eng._emitted)
+
+
+def test_engine_global_deadline_returns_partial_results(setup):
+    """Global deadline expiry degrades gracefully: completed work is kept,
+    the in-flight request is evicted with its partial tokens, never-admitted
+    requests come back empty with admitted_s=-1.0 — no exception."""
+    cfg, params = setup
+    reqs = [
+        Request(uid=0, prompt=np.arange(3, dtype=np.int32), max_new_tokens=4),
+        # arrives only after the deadline: must be evicted un-admitted
+        Request(uid=1, prompt=np.arange(3, dtype=np.int32), max_new_tokens=4,
+                arrival_s=120.0),
+    ]
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=2)
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs, deadline_s=1.0)
+    assert set(done) == {0, 1}
+    assert done[0].status == "ok"
+    assert len(done[0].tokens) == 4
+    assert done[1].status == "evicted"
+    assert len(done[1].tokens) == 0 and done[1].admitted_s == -1.0
+    assert eng.stats["deadline_expired"]
+    assert eng.stats["n_ok"] == 1 and eng.stats["n_evicted"] == 1
+
+
+def test_engine_per_request_deadline_evicts_only_that_request(setup):
+    """A request's own deadline_s evicts just that request; pool mates run
+    to completion with bit-exact tokens."""
+    cfg, params = setup
+    doomed = Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                     max_new_tokens=4, deadline_s=1e-9)
+    healthy = Request(uid=1, prompt=np.arange(5, dtype=np.int32), max_new_tokens=4)
+    eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=2)
+    eng.warmup(prompt_lens={3, 5})
+    done = eng.run([doomed, healthy])
+    assert done[0].status == "evicted"
+    assert done[1].status == "ok"
+    np.testing.assert_array_equal(done[1].tokens, _solo(params, cfg, healthy))
+
+
 def test_engine_rejects_bad_pool_shape(setup):
     cfg, params = setup
     with pytest.raises(ValueError, match="num_slots"):
