@@ -34,6 +34,17 @@ committed baseline in ``benchmarks/baselines/``.  Extra knobs:
     REPRO_ENGINE_BENCH_FAULT_RATE (default 0.02)
     REPRO_ENGINE_BENCH_FAULT_SEED (default 0)
 
+Overload lane (``--overload`` or REPRO_ENGINE_BENCH_OVERLOAD=1): probes the
+pool's service capacity with an all-at-once burst, then replays Poisson
+traces at 0.5x / 1.0x / 2.0x of that capacity against a BOUNDED queue
+(``max_queue = 2 * slots`` by default) — the admission-control contract is
+that at 2x saturation the queue depth stays bounded and excess load comes
+back as structured ``rejected`` / ``evicted`` completions instead of
+unbounded tail latency.  All three shed policies are compared at 2x.
+Artifact: ``experiments/results/engine_bench_overload.json``, gated (warn
+mode) by the committed baseline.  Extra knobs:
+    REPRO_ENGINE_BENCH_MAX_QUEUE (default 2 * slots)
+
 Mesh lane (``--mesh`` or REPRO_ENGINE_BENCH_MESH=1): replays the same trace
 through the engine on a forced-host-device ``(data=2, model=2)`` mesh, in
 both serving shardings — ``exact`` (params replicated, slots sharded over
@@ -203,7 +214,153 @@ def _run_faults_lane(params, cfg, reqs, *, arch, slots, cache_len, chunk,
     return payload
 
 
-def run(mesh_lane: bool = False, faults_lane: bool = False):
+def _run_overload_lane(params, cfg, *, arch, slots, cache_len, chunk,
+                       prompts, gens, seed, n_requests):
+    """Admission control under saturation (docs/robustness.md §Overload).
+
+    Probe capacity with an all-at-once burst (unbounded queue), then replay
+    Poisson traces at 0.5x/1x/2x the measured service rate with
+    ``max_queue`` set.  The contract: the queue stays bounded at every load,
+    and past saturation excess requests come back as structured
+    ``rejected``/``evicted`` completions rather than unbounded tail latency.
+    """
+    from repro.launch.engine import SHED_POLICIES
+
+    max_queue = int(os.environ.get("REPRO_ENGINE_BENCH_MAX_QUEUE", 2 * slots))
+    rng = np.random.RandomState(seed)
+    bodies = [
+        (rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(np.int32),
+         int(rng.choice(gens)))
+        for _ in range(n_requests)
+    ]
+
+    def make_reqs(arrivals, deadlines):
+        return [
+            Request(uid=i, prompt=bodies[i][0], max_new_tokens=bodies[i][1],
+                    arrival_s=float(arrivals[i]), deadline_s=deadlines[i])
+            for i in range(n_requests)
+        ]
+
+    def serve(reqs, **engine_kw):
+        eng = Engine(params, cfg, num_slots=slots, cache_len=cache_len,
+                     chunk=chunk, **engine_kw)
+        eng.warmup(prompt_lens=prompts)
+        done = eng.run(reqs)
+        served = {u: c for u, c in done.items() if c.status == "ok"}
+        stats = dict(eng.stats)
+        stats.update(_latencies(served) if served else
+                     {"p50_latency_ms": 0.0, "p99_latency_ms": 0.0})
+        stats["rejected_frac"] = stats["n_rejected"] / max(len(done), 1)
+        stats["evicted_frac"] = stats["n_evicted"] / max(len(done), 1)
+        return done, stats
+
+    # capacity probe: the whole trace due at t=0, queue unbounded — the
+    # steady-state service rate every load multiplier is measured against
+    zeros = np.zeros(n_requests)
+    done_probe, s_probe = serve(make_reqs(zeros, [None] * n_requests))
+    capacity_rps = n_requests / max(s_probe["makespan_s"], 1e-9)
+    # deadline buckets scaled to observed service latency: the tight bucket
+    # is hopeless under queueing delay (exercises eviction / shed-by-slo),
+    # the roomy one always survives
+    base_lat = max(s_probe["p50_latency_ms"] / 1e3, 1e-3)
+    deadline_choices = [base_lat * 2, base_lat * 16, None, None]
+    deadlines = [deadline_choices[int(rng.randint(4))] for _ in range(n_requests)]
+
+    loads = {}
+    done_2x = None
+    for mult in (0.5, 1.0, 2.0):
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / (capacity_rps * mult), size=n_requests)
+        )
+        done, stats = serve(make_reqs(arrivals, deadlines),
+                            max_queue=max_queue, shed_policy="reject-new")
+        loads[mult] = stats
+        if mult == 2.0:
+            done_2x, arrivals_2x = done, arrivals
+
+    # shed-policy comparison on the same 2x trace
+    policies = {"reject-new": loads[2.0]}
+    for policy in SHED_POLICIES:
+        if policy == "reject-new":
+            continue
+        _, stats = serve(make_reqs(arrivals_2x, deadlines),
+                         max_queue=max_queue, shed_policy=policy)
+        policies[policy] = stats
+
+    # structured-degradation spot check: requests served "ok" at 2x are
+    # still bit-exact vs their solo runs (greedy; MoE routing exempt)
+    token_exact = cfg.moe is None
+    parity_ok = True
+    if token_exact:
+        ok_uids = [u for u, c in sorted(done_2x.items()) if c.status == "ok"]
+        for uid in ok_uids[:3]:
+            solo = solo_generate(params, cfg, bodies[uid][0], bodies[uid][1],
+                                 cache_len=cache_len)
+            if not np.array_equal(done_2x[uid].tokens, solo):
+                parity_ok = False
+                break
+
+    rows = [
+        [f"{mult}x", f"{st['tok_s']:.0f}", f"{st['p50_latency_ms']:.0f}",
+         f"{st['p99_latency_ms']:.0f}", f"{st['peak_queue_depth']}",
+         f"{st['n_rejected']}", f"{st['n_evicted']}"]
+        for mult, st in loads.items()
+    ]
+    print(f"\n== Overload lane ({arch}, slots={slots}, n={n_requests}, "
+          f"max_queue={max_queue}, capacity~{capacity_rps:.1f} req/s; "
+          f"informational) ==")
+    print(md_table(
+        ["load", "tok/s", "p50 ms", "p99 ms", "peak q", "rejected", "evicted"],
+        rows,
+    ))
+    print(md_table(
+        ["policy@2x", "rejected", "evicted", "peak q"],
+        [[p, f"{st['n_rejected']}", f"{st['n_evicted']}",
+          f"{st['peak_queue_depth']}"] for p, st in policies.items()],
+    ))
+
+    s2x = loads[2.0]
+    payload = {
+        "arch": arch,
+        "num_slots": slots,
+        "n_requests": n_requests,
+        "chunk": chunk,
+        "max_queue": max_queue,
+        "capacity_rps": capacity_rps,
+        "probe": s_probe,
+        "loads": {str(m): st for m, st in loads.items()},
+        "policies_2x": policies,
+        # flat gate keys (tools/check_bench.py reads top level only)
+        "tok_s_2x": s2x["tok_s"],
+        "p99_latency_ms_2x": s2x["p99_latency_ms"],
+        "peak_queue_depth_2x": s2x["peak_queue_depth"],
+        "queue_bound_margin": max_queue - max(
+            st["peak_queue_depth"] for st in loads.values()
+        ),
+        "rejected_frac_2x": s2x["rejected_frac"],
+        "served_token_exact": bool(token_exact and parity_ok),
+    }
+    save("engine_bench_overload", payload)
+    # after save, so the JSON survives for debugging
+    if payload["queue_bound_margin"] < 0:
+        raise AssertionError(
+            f"admission control failed to bound the queue: peak depth "
+            f"exceeded max_queue={max_queue} by {-payload['queue_bound_margin']}"
+        )
+    if s2x["n_rejected"] + s2x["n_evicted"] == 0:
+        raise AssertionError(
+            "2x-saturation trace shed no load: admission control never "
+            "engaged (trace too short or queue bound too large?)"
+        )
+    if token_exact and not parity_ok:
+        raise AssertionError(
+            "a request served under overload diverged from its solo run"
+        )
+    return payload
+
+
+def run(mesh_lane: bool = False, faults_lane: bool = False,
+        overload_lane: bool = False):
     arch = os.environ.get("REPRO_ENGINE_BENCH_ARCH", "qwen3-4b")
     slots = int(os.environ.get("REPRO_ENGINE_BENCH_SLOTS", 4))
     n_requests = int(os.environ.get("REPRO_ENGINE_BENCH_REQUESTS", 32))
@@ -216,6 +373,9 @@ def run(mesh_lane: bool = False, faults_lane: bool = False):
     mesh_lane = mesh_lane or os.environ.get("REPRO_ENGINE_BENCH_MESH", "") == "1"
     faults_lane = (
         faults_lane or os.environ.get("REPRO_ENGINE_BENCH_FAULTS", "") == "1"
+    )
+    overload_lane = (
+        overload_lane or os.environ.get("REPRO_ENGINE_BENCH_OVERLOAD", "") == "1"
     )
     if mesh_lane and jax.device_count() < 4:
         raise RuntimeError(
@@ -246,6 +406,12 @@ def run(mesh_lane: bool = False, faults_lane: bool = False):
         return _run_faults_lane(
             params, cfg, reqs, arch=arch, slots=slots, cache_len=cache_len,
             chunk=chunk, prompts=prompts, reps=reps,
+        )
+    if overload_lane:
+        return _run_overload_lane(
+            params, cfg, arch=arch, slots=slots, cache_len=cache_len,
+            chunk=chunk, prompts=prompts, gens=gens, seed=seed,
+            n_requests=n_requests,
         )
 
     # best-of-N replays per scheduler: both replay the same trace; scheduler
@@ -362,8 +528,15 @@ def main():
              "fault-free token parity, and recovery throughput under a "
              "seeded fault schedule (artifact: engine_bench_faults.json)",
     )
+    ap.add_argument(
+        "--overload", action="store_true",
+        help="run the overload lane instead: capacity probe, bounded-queue "
+             "Poisson replays at 0.5x/1x/2x saturation, shed-policy "
+             "comparison (artifact: engine_bench_overload.json)",
+    )
     args = ap.parse_args()
-    run(mesh_lane=args.mesh, faults_lane=args.faults)
+    run(mesh_lane=args.mesh, faults_lane=args.faults,
+        overload_lane=args.overload)
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ SUITES = (
     "serve_bench",      # prefill + scan decode vs per-token loop (informational)
     "engine_bench",     # continuous batching vs lock-step static (informational)
     "engine_bench_faults",  # detector overhead + fault recovery (warn gate input)
+    "engine_bench_overload",  # bounded-queue admission control (warn gate input)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 
@@ -29,6 +30,7 @@ SUITES = (
 ALIASES = {
     "kernels_bench_compiled": ("kernels_bench", {"backend": "compiled"}),
     "engine_bench_faults": ("engine_bench", {"faults_lane": True}),
+    "engine_bench_overload": ("engine_bench", {"overload_lane": True}),
 }
 
 

@@ -1,4 +1,5 @@
 from repro.checkpoint.checkpoint import (
+    CheckpointError,
     latest_step,
     restore,
     save,
@@ -6,4 +7,11 @@ from repro.checkpoint.checkpoint import (
     wait_pending,
 )
 
-__all__ = ["latest_step", "restore", "save", "save_async", "wait_pending"]
+__all__ = [
+    "CheckpointError",
+    "latest_step",
+    "restore",
+    "save",
+    "save_async",
+    "wait_pending",
+]

@@ -7,7 +7,17 @@ manifest (tree structure + leaf paths + dtypes/shapes).  Writes go to
 manifest lands — a crashed writer can never leave a half-readable step
 (restart-safety).  Restore takes target shardings, so a job restarted on a
 *different* mesh (elastic scaling) re-shards transparently: leaves are read
-on host and device_put with the new NamedShardings."""
+on host and device_put with the new NamedShardings.
+
+Failure hygiene:
+
+* a torn/corrupt step surfaces as :class:`CheckpointError` naming the
+  missing or unreadable leaf file, never a bare numpy traceback;
+* ``save`` and ``latest_step`` sweep stale ``tmp-<step>`` directories left
+  behind by a crashed writer (live in-process async writers are exempt);
+* async writer errors are captured and re-raised by :func:`wait_pending`
+  (the first one wins) instead of dying silently in the daemon thread.
+"""
 from __future__ import annotations
 
 import json
@@ -20,9 +30,40 @@ from typing import Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "wait_pending"]
+__all__ = [
+    "save",
+    "save_async",
+    "restore",
+    "latest_step",
+    "wait_pending",
+    "CheckpointError",
+]
 
-_pending: list = []
+
+class CheckpointError(RuntimeError):
+    """A checkpoint could not be written or read back.  The message names
+    the offending step directory / leaf file so a torn checkpoint is
+    diagnosable without spelunking numpy tracebacks."""
+
+
+class _Writer:
+    """Bookkeeping for one in-flight async save: the thread, the target
+    (dir, step) — so the stale-tmp sweep can exempt live writers — and the
+    error slot the daemon thread parks its exception in."""
+
+    __slots__ = ("thread", "dir", "step", "error")
+
+    def __init__(self, ckpt_dir, step: int):
+        self.dir = Path(ckpt_dir).resolve()
+        self.step = step
+        self.thread: Optional[threading.Thread] = None
+        self.error: Optional[BaseException] = None
+
+
+# guarded by _pending_lock: save_async appends/prunes from the caller
+# thread while wait_pending drains from any thread
+_pending_lock = threading.Lock()
+_pending: list[_Writer] = []
 
 
 def _flatten_with_paths(tree):
@@ -38,9 +79,41 @@ def _flatten_with_paths(tree):
     return items, treedef
 
 
-def save(ckpt_dir, step: int, tree) -> Path:
-    """Synchronous atomic save. Returns the committed directory."""
-    ckpt_dir = Path(ckpt_dir)
+def _live_tmp_steps(ckpt_dir: Path) -> set:
+    """Steps with an in-process async writer still running against
+    ``ckpt_dir`` — their tmp dirs are NOT stale."""
+    d = Path(ckpt_dir).resolve()
+    with _pending_lock:
+        return {
+            w.step
+            for w in _pending
+            if w.dir == d and w.thread is not None and w.thread.is_alive()
+        }
+
+
+def _sweep_stale_tmp(ckpt_dir) -> None:
+    """Remove ``tmp-<step>`` directories left by a *crashed* writer.  A tmp
+    dir owned by a live in-process async writer is left alone; everything
+    else is, by the commit protocol, garbage (a completed write always ends
+    in the rename)."""
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return
+    live = _live_tmp_steps(d)
+    for p in d.iterdir():
+        if not (p.is_dir() and p.name.startswith("tmp-")):
+            continue
+        try:
+            step = int(p.name.split("-", 1)[1])
+        except ValueError:
+            continue
+        if step not in live:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def _write_step(ckpt_dir: Path, step: int, host_items) -> Path:
+    """The commit protocol shared by sync and async saves: leaves + manifest
+    into ``tmp-<step>``, then one atomic rename to ``step-<step>``."""
     tmp = ckpt_dir / f"tmp-{step}"
     final = ckpt_dir / f"step-{step}"
     if final.exists():
@@ -48,11 +121,8 @@ def save(ckpt_dir, step: int, tree) -> Path:
     if tmp.exists():
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
-
-    items, _ = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": []}
-    for name, leaf in items:
-        arr = np.asarray(jax.device_get(leaf))
+    for name, arr in host_items:
         fname = f"{name}.npy"
         np.save(tmp / fname, arr)
         manifest["leaves"].append(
@@ -63,46 +133,66 @@ def save(ckpt_dir, step: int, tree) -> Path:
     return final
 
 
+def save(ckpt_dir, step: int, tree) -> Path:
+    """Synchronous atomic save. Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    _sweep_stale_tmp(ckpt_dir)
+    items, _ = _flatten_with_paths(tree)
+    host_items = [(n, np.asarray(jax.device_get(x))) for n, x in items]
+    return _write_step(ckpt_dir, step, host_items)
+
+
 def save_async(ckpt_dir, step: int, tree) -> threading.Thread:
     """Async save off the training critical path.  The tree is snapshotted
     to host synchronously (cheap vs training step), the disk write happens in
-    a daemon thread.  ``wait_pending()`` joins all outstanding writers."""
+    a daemon thread.  ``wait_pending()`` joins all outstanding writers and
+    re-raises the first writer error, if any."""
     items, _ = _flatten_with_paths(tree)
     host_items = [(n, np.asarray(jax.device_get(x))) for n, x in items]
+    w = _Writer(ckpt_dir, step)
 
     def _write():
-        ckpt_dir_p = Path(ckpt_dir)
-        tmp = ckpt_dir_p / f"tmp-{step}"
-        final = ckpt_dir_p / f"step-{step}"
-        if final.exists():
-            return
-        if tmp.exists():
-            shutil.rmtree(tmp)
-        tmp.mkdir(parents=True)
-        manifest = {"step": step, "leaves": []}
-        for name, arr in host_items:
-            np.save(tmp / f"{name}.npy", arr)
-            manifest["leaves"].append(
-                {"name": name, "file": f"{name}.npy", "shape": arr.shape, "dtype": str(arr.dtype)}
-            )
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        os.replace(tmp, final)
+        try:
+            _write_step(Path(ckpt_dir), step, host_items)
+        except BaseException as e:  # parked for wait_pending, never swallowed
+            w.error = e
 
     t = threading.Thread(target=_write, daemon=True)
+    w.thread = t
+    with _pending_lock:
+        # prune writers that already finished cleanly; keep errored ones so
+        # their failure still surfaces at the next wait_pending()
+        _pending[:] = [
+            p for p in _pending if p.thread.is_alive() or p.error is not None
+        ]
+        _pending.append(w)
     t.start()
-    _pending.append(t)
     return t
 
 
-def wait_pending():
-    while _pending:
-        _pending.pop().join()
+def wait_pending() -> None:
+    """Join every outstanding async writer.  Raises :class:`CheckpointError`
+    carrying the first writer failure (all writers are still joined first, so
+    no thread is left dangling)."""
+    with _pending_lock:
+        writers, _pending[:] = _pending[:], []
+    first: Optional[_Writer] = None
+    for w in writers:
+        w.thread.join()
+        if first is None and w.error is not None:
+            first = w
+    if first is not None:
+        raise CheckpointError(
+            f"async checkpoint writer for step {first.step} under "
+            f"{first.dir} failed: {type(first.error).__name__}: {first.error}"
+        ) from first.error
 
 
 def latest_step(ckpt_dir) -> Optional[int]:
     d = Path(ckpt_dir)
     if not d.exists():
         return None
+    _sweep_stale_tmp(d)
     steps = []
     for p in d.iterdir():
         if p.name.startswith("step-") and (p / "manifest.json").exists():
@@ -113,9 +203,25 @@ def latest_step(ckpt_dir) -> Optional[int]:
 def restore(ckpt_dir, step: int, like_tree, shardings=None):
     """Restore into the structure of ``like_tree`` (arrays or
     ShapeDtypeStructs).  ``shardings``: matching tree of NamedShardings for
-    elastic resharding; None leaves arrays on the default device."""
+    elastic resharding; None leaves arrays on the default device.
+
+    Leaves present in the checkpoint but absent from ``like_tree`` are
+    ignored (partial restore); a leaf ``like_tree`` expects that is missing,
+    unreadable, or mis-shaped raises :class:`CheckpointError` naming it.
+    """
     final = Path(ckpt_dir) / f"step-{step}"
-    manifest = json.loads((final / "manifest.json").read_text())
+    man_path = final / "manifest.json"
+    if not man_path.exists():
+        raise CheckpointError(
+            f"no committed checkpoint at {final} (manifest.json missing); "
+            f"latest committed step under {ckpt_dir} is {latest_step(ckpt_dir)!r}"
+        )
+    try:
+        manifest = json.loads(man_path.read_text())
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointError(
+            f"corrupt checkpoint manifest {man_path}: {e}"
+        ) from e
     by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
 
     items, treedef = _flatten_with_paths(like_tree)
@@ -126,8 +232,41 @@ def restore(ckpt_dir, step: int, like_tree, shardings=None):
         )[0]
     leaves = []
     for i, (name, like) in enumerate(items):
-        arr = np.load(final / by_name[name]["file"])
-        assert tuple(arr.shape) == tuple(like.shape), (name, arr.shape, like.shape)
+        entry = by_name.get(name)
+        if entry is None:
+            raise CheckpointError(
+                f"checkpoint {final} has no leaf '{name}' expected by the "
+                f"restore target (manifest holds {sorted(by_name)[:8]}...)"
+            )
+        fpath = final / entry["file"]
+        try:
+            arr = np.load(fpath)
+        except FileNotFoundError as e:
+            raise CheckpointError(
+                f"checkpoint {final} is torn: leaf file '{entry['file']}' "
+                f"(leaf '{name}') is missing"
+            ) from e
+        except (ValueError, OSError, EOFError) as e:
+            raise CheckpointError(
+                f"checkpoint {final} is torn: leaf file '{entry['file']}' "
+                f"(leaf '{name}') is unreadable: {e}"
+            ) from e
+        if arr.dtype.kind == "V":
+            # numpy round-trips extension dtypes (bf16, fp8) as raw void
+            # bytes; reinterpret against the restore target's dtype
+            want = np.dtype(like.dtype)
+            if arr.dtype.itemsize != want.itemsize:
+                raise CheckpointError(
+                    f"checkpoint {final} leaf '{name}': stored itemsize "
+                    f"{arr.dtype.itemsize} does not match restore target "
+                    f"dtype {want} (itemsize {want.itemsize})"
+                )
+            arr = arr.view(want)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise CheckpointError(
+                f"checkpoint {final} leaf '{name}': shape {tuple(arr.shape)} "
+                f"does not match restore target {tuple(like.shape)}"
+            )
         if sh_flat is not None:
             leaves.append(jax.device_put(arr, sh_flat[i]))
         else:

@@ -253,6 +253,21 @@ def serve_pool_shardings(cfg: ModelConfig, mesh: Mesh, rules: Rules, *,
     }
 
 
+def serve_pool_tree(pool_sh: dict) -> dict:
+    """Reshape a :func:`serve_pool_shardings` bundle into a sharding tree
+    matching ``lm.init_pool_state``'s single-pytree pool layout — the restore
+    target for ``Engine.resume``'s elastic path: a snapshot taken on one mesh
+    shape lands on another by passing this tree to ``checkpoint.restore``."""
+    return {
+        "cache": pool_sh["cache"],
+        "tok": pool_sh["tok"],
+        "pos": pool_sh["vec"],
+        "active": pool_sh["vec"],
+        "remaining": pool_sh["vec"],
+        "keys": pool_sh["keys"],
+    }
+
+
 def shardings_for(spec_tree, mesh: Mesh, rules: Rules, shapes=None):
     """Map a logical-spec tree to a NamedSharding tree.  With ``shapes`` (a
     matching tree of arrays/structs), indivisible assignments degrade to

@@ -43,19 +43,39 @@ ladder.  ``Engine.run`` never raises mid-batch: every request ends in a
 ``evicted`` / ``failed``), deadlines (global and per-request) evict with
 partial tokens, and injected dispatch failures (``faults=`` with
 ``site="dispatch"``) are retried with exponential backoff.
+
+Crash consistency and overload (docs/robustness.md §Crash-consistent
+serving): ``snapshot()`` serializes the COMPLETE live serving state — the
+device pool (every cache family, float and int8, per-slot tok/pos/active/
+remaining vectors and PRNG keys) plus host-side request metadata and the
+pending queue — through ``checkpoint.save``'s atomic tmp→rename commit;
+``snapshot_every_chunks=`` autosaves at the existing one-sync-per-chunk
+boundary.  ``Engine.resume`` rebuilds the pool from the latest committed
+snapshot (onto a *different* mesh shape if asked — the elastic resharding
+path) and reconciles the write-ahead request journal (``journal=``, see
+launch/journal.py) on top: requests journaled ``finished`` are never
+re-served, accepted-but-unfinished requests missing from the snapshot are
+replayed.  Greedy exact-mode tokens after a kill+resume are bit-exact vs an
+uninterrupted run.  Overload is admission-controlled: ``max_queue=`` bounds
+the due-request queue and a ``shed_policy`` (``reject-new`` /
+``evict-latest-deadline`` / ``shed-by-slo``) picks what to drop (status
+``rejected``) when traffic exceeds capacity.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import json
 import time
 from collections import deque
+from pathlib import Path
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint
 from repro.core.faults import (
     DispatchFault,
     DispatchFaultInjector,
@@ -65,9 +85,11 @@ from repro.core.faults import (
 from repro.distributed.constraints import axis_rules
 from repro.distributed.sharding import (
     serve_pool_shardings,
+    serve_pool_tree,
     serve_rules,
     shardings_for,
 )
+from repro.launch.journal import RequestJournal, read_journal, replay_plan
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -78,6 +100,7 @@ __all__ = [
     "run_static_baseline",
     "solo_generate",
     "STATUSES",
+    "SHED_POLICIES",
 ]
 
 # Completion.status values, in degradation order (docs/robustness.md):
@@ -85,7 +108,22 @@ __all__ = [
 #   degraded — health detectors tripped; re-served solo on the exact datapath
 #   evicted  — deadline expiry (global or per-request); tokens are partial
 #   failed   — the exact datapath itself produced non-finite logits
-STATUSES = ("ok", "degraded", "evicted", "failed")
+#   rejected — shed by admission control before taking a slot (overload)
+STATUSES = ("ok", "degraded", "evicted", "failed", "rejected")
+
+# Admission-control shed policies (active only with ``max_queue=`` set):
+#   reject-new            — shed from the queue tail: the most recently
+#                           arrived work is turned away first
+#   evict-latest-deadline — shed the queued request whose effective deadline
+#                           (arrival + deadline_s; none = infinity) is
+#                           furthest away — lowest urgency loses its place
+#   shed-by-slo           — shed the queued request least likely to meet its
+#                           SLO (smallest deadline slack right now);
+#                           deadline-free requests shed newest-first
+SHED_POLICIES = ("reject-new", "evict-latest-deadline", "shed-by-slo")
+
+# snapshot meta-blob layout version (bumped on incompatible change)
+_SNAPSHOT_FORMAT = 1
 
 
 def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
@@ -156,6 +194,35 @@ class _Ticket:
     trips: int = 0
 
 
+def _ticket_record(t: _Ticket) -> dict:
+    """A JSON-serializable snapshot record for one queued/in-flight request —
+    the same field set the journal's ``accepted`` record carries."""
+    r = t.req
+    return {
+        "uid": int(r.uid),
+        "prompt": [int(x) for x in np.asarray(r.prompt)],
+        "max_new_tokens": int(r.max_new_tokens),
+        "arrival_s": float(r.arrival_s),
+        "deadline_s": None if r.deadline_s is None else float(r.deadline_s),
+        "trips": int(t.trips),
+    }
+
+
+def _ticket_from_record(rec: dict, *, arrival_s: float = 0.0) -> _Ticket:
+    """Rebuild a queue ticket from a snapshot/journal record.  Wall-clock
+    fields are rebased: the dead run's clock is meaningless here, so restored
+    requests are due immediately (``arrival_s=0``) and any ``deadline_s``
+    window restarts at resume."""
+    req = Request(
+        uid=int(rec["uid"]),
+        prompt=np.asarray(rec["prompt"], np.int32),
+        max_new_tokens=int(rec["max_new_tokens"]),
+        arrival_s=arrival_s,
+        deadline_s=rec.get("deadline_s"),
+    )
+    return _Ticket(req, trips=int(rec.get("trips", 0)))
+
+
 class Engine:
     """Slot-pool scheduler around the jitted admit / decode-chunk steps.
 
@@ -187,12 +254,34 @@ class Engine:
                  faults: Optional[FaultConfig] = None, detectors: bool = True,
                  logit_sentinel: float = 1e4, quarantine_retries: int = 0,
                  max_dispatch_retries: int = 3,
-                 dispatch_backoff_s: float = 0.001):
+                 dispatch_backoff_s: float = 0.001,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject-new",
+                 snapshot_dir=None,
+                 snapshot_every_chunks: Optional[int] = None,
+                 journal=None):
         if num_slots < 1 or cache_len < 2 or chunk < 1:
             raise ValueError(
                 f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
                 f"(got {num_slots}, {cache_len}, {chunk})"
             )
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(
+                f"shed_policy must be one of {SHED_POLICIES} (got {shed_policy!r})"
+            )
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 when set (got {max_queue})")
+        if snapshot_every_chunks is not None:
+            if snapshot_every_chunks < 1:
+                raise ValueError(
+                    f"snapshot_every_chunks must be >= 1 when set "
+                    f"(got {snapshot_every_chunks})"
+                )
+            if snapshot_dir is None:
+                raise ValueError(
+                    "snapshot_every_chunks needs snapshot_dir= (nowhere to "
+                    "commit the autosaves)"
+                )
         self.params = params
         # sqrt-site fault schedules ride the serving config itself (hashable,
         # so the jitted steps key their caches correctly); activation faults
@@ -206,6 +295,17 @@ class Engine:
         self.quantized_kv = quantized_kv
         self.chunk = chunk
         self.eos_id = eos_id
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.seed = int(seed)
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.snapshot_dir = None if snapshot_dir is None else Path(snapshot_dir)
+        self.snapshot_every_chunks = snapshot_every_chunks
+        if journal is None or isinstance(journal, RequestJournal):
+            self._journal = journal
+        else:
+            self._journal = RequestJournal(journal)
         self.faults = faults
         self.detectors = detectors
         self.logit_sentinel = float(logit_sentinel)
@@ -315,41 +415,297 @@ class Engine:
     def reset(self):
         """Zero the pool: fresh cache, all slots free, queues empty.  In mesh
         mode the pool state is committed to its serving shardings here, once;
-        the jitted steps' matching in/out shardings keep it there."""
+        the jitted steps' matching in/out shardings keep it there.  The
+        snapshot step counter (total decode chunks ever served) survives a
+        reset so autosaves to the same ``snapshot_dir`` never collide."""
         b = self.num_slots
-        self._cache, _ = lm.init_cache(
-            self.cfg, b, self.cache_len, quantized=self.quantized_kv
+        self._set_pool(
+            lm.init_pool_state(
+                self.cfg, b, self.cache_len, quantized=self.quantized_kv,
+                key=self._base_key,
+            )
         )
-        self._tok = jnp.zeros((b, 1), jnp.int32)
-        self._pos = jnp.zeros((b,), jnp.int32)
-        self._active = jnp.zeros((b,), bool)
-        self._remaining = jnp.zeros((b,), jnp.int32)
-        self._keys = jax.random.split(self._base_key, b)
-        if self.mesh is not None:
-            sh = self._pool_sh
-            self._cache = jax.device_put(self._cache, sh["cache"])
-            self._tok = jax.device_put(self._tok, sh["tok"])
-            self._pos = jax.device_put(self._pos, sh["vec"])
-            self._active = jax.device_put(self._active, sh["vec"])
-            self._remaining = jax.device_put(self._remaining, sh["vec"])
-            self._keys = jax.device_put(self._keys, sh["keys"])
         self._owner: list[Optional[Request]] = [None] * b
         self._emitted: list[list[int]] = [[] for _ in range(b)]
         self._admitted_s = [0.0] * b
         self._trips = [0] * b
+        self._queue: deque = deque()      # due tickets waiting for a slot
+        self._arrivals: deque = deque()   # accepted tickets not yet due
         self._dispatch_faults = 0
         self._dispatch_retries = 0
+        self._snapshots_written = 0
+        self._journal_replays = 0
+        self._chunks_total = getattr(self, "_chunks_total", 0)
         if self._injector is not None:
             self._injector.reset()
 
+    def _pool_state(self) -> dict:
+        """The live device pool as the single ``lm.init_pool_state`` tree —
+        the serialization unit ``snapshot`` hands to ``checkpoint.save``."""
+        return {
+            "cache": self._cache,
+            "tok": self._tok,
+            "pos": self._pos,
+            "active": self._active,
+            "remaining": self._remaining,
+            "keys": self._keys,
+        }
+
+    def _set_pool(self, pool: dict) -> None:
+        """Install a pool-state tree as the live device state; in mesh mode
+        every leaf is committed to its serving sharding."""
+        if self.mesh is not None:
+            pool = jax.device_put(pool, serve_pool_tree(self._pool_sh))
+        self._cache = pool["cache"]
+        self._tok = pool["tok"]
+        self._pos = pool["pos"]
+        self._active = pool["active"]
+        self._remaining = pool["remaining"]
+        self._keys = pool["keys"]
+
     def warmup(self, prompt_lens):
         """Compile the admit step for each prompt-length bucket plus one
-        decode chunk, off the serving clock, then reset the pool."""
+        decode chunk, off the serving clock, then reset the pool.  NOTE: the
+        trailing reset wipes restored state — do not warmup an engine built
+        by :meth:`resume`; its first chunk compiles on the serving clock
+        instead."""
         for s in sorted(set(int(s) for s in prompt_lens)):
             dummy = Request(uid=-1, prompt=np.zeros(s, np.int32), max_new_tokens=1)
             self._admit(dummy, slot=0, now=0.0)
         self._decode_chunk()
         self.reset()
+
+    # -- crash consistency: snapshot / resume / journal replay --------------
+
+    def snapshot(self, ckpt_dir=None, *, step: Optional[int] = None) -> Path:
+        """Serialize the COMPLETE live serving state through
+        ``checkpoint.save``'s atomic tmp→rename commit and return the
+        committed directory.
+
+        One snapshot holds (a) the device pool as the single
+        ``lm.init_pool_state`` tree — every cache family, float and int8,
+        plus per-slot tok/pos/active/remaining vectors and PRNG keys — and
+        (b) a host-metadata blob: per-slot request records (uid, prompt,
+        budget, tokens emitted so far, trips), the pending queue, and the
+        engine shape.  ``step`` defaults to the lifetime decode-chunk
+        counter, so autosaves are monotonic and never collide.  A resumed
+        engine continues greedy exact-mode decode bit-exactly
+        (tests/launch/test_engine_snapshot.py).
+        """
+        ckpt_dir = ckpt_dir if ckpt_dir is not None else self.snapshot_dir
+        if ckpt_dir is None:
+            raise ValueError("snapshot needs a directory: pass ckpt_dir= or "
+                             "construct the Engine with snapshot_dir=")
+        step = self._chunks_total if step is None else int(step)
+        slots_meta = []
+        for slot in range(self.num_slots):
+            req = self._owner[slot]
+            if req is None:
+                slots_meta.append(None)
+            else:
+                rec = _ticket_record(_Ticket(req, self._trips[slot]))
+                rec["emitted"] = [int(x) for x in self._emitted[slot]]
+                slots_meta.append(rec)
+        meta = {
+            "format": _SNAPSHOT_FORMAT,
+            "engine": {
+                "num_slots": self.num_slots,
+                "cache_len": self.cache_len,
+                "quantized_kv": self.quantized_kv,
+                "chunk": self.chunk,
+                "eos_id": self.eos_id,
+                "temperature": self.temperature,
+                "top_k": self.top_k,
+                "seed": self.seed,
+                "max_queue": self.max_queue,
+                "shed_policy": self.shed_policy,
+            },
+            "chunks_total": int(self._chunks_total),
+            "slots": slots_meta,
+            # pending work in service order: due queue first, then future
+            # arrivals — all of it is due immediately after a resume
+            "queue": [_ticket_record(t) for t in self._queue]
+            + [_ticket_record(t) for t in self._arrivals],
+        }
+        blob = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
+        path = checkpoint.save(
+            ckpt_dir, step, {"pool": self._pool_state(), "meta": blob}
+        )
+        self._snapshots_written += 1
+        if self._journal is not None:
+            self._journal.snapshot(step)
+        return path
+
+    @staticmethod
+    def _read_snapshot_meta(ckpt_dir, step: int) -> dict:
+        """Read just the host-metadata blob of a committed snapshot (needed
+        before the pool restore target can even be shaped)."""
+        final = Path(ckpt_dir) / f"step-{step}"
+        man_path = final / "manifest.json"
+        if not man_path.exists():
+            raise checkpoint.CheckpointError(
+                f"no committed engine snapshot at {final}"
+            )
+        manifest = json.loads(man_path.read_text())
+        entry = next(
+            (leaf for leaf in manifest["leaves"] if leaf["name"] == "meta"), None
+        )
+        if entry is None:
+            raise checkpoint.CheckpointError(
+                f"snapshot {final} has no 'meta' leaf — not an engine snapshot"
+            )
+        meta = json.loads(np.load(final / entry["file"]).tobytes().decode("utf-8"))
+        if meta.get("format") != _SNAPSHOT_FORMAT:
+            raise checkpoint.CheckpointError(
+                f"snapshot {final} has format {meta.get('format')!r}; this "
+                f"build reads format {_SNAPSHOT_FORMAT}"
+            )
+        return meta
+
+    @classmethod
+    def resume(cls, params, cfg: ModelConfig, ckpt_dir=None, *,
+               step: Optional[int] = None, journal=None, mesh=None,
+               rules=None, **overrides) -> "Engine":
+        """Rebuild a crashed engine: restore the latest committed snapshot
+        under ``ckpt_dir`` (if any), then reconcile the write-ahead journal
+        on top.  Returns an engine ready for :meth:`run` — restored in-flight
+        slots continue decoding and restored queue entries are served first,
+        ahead of any new requests passed to ``run``.
+
+        * **Elastic resharding**: pass ``mesh=`` (and optionally ``rules=``)
+          to land a snapshot taken on one mesh shape onto another — the pool
+          leaves are read on host and re-sharded via ``serve_pool_shardings``
+          (1-device → mesh and back both work).
+        * **Journal reconciliation**: uids journaled ``finished`` are
+          dropped from the restored state (their completion is already
+          durable in the journal); ``accepted`` requests with no finished
+          record and no presence in the snapshot are replayed from their
+          journal fields (counted in the ``journal_replays`` stat).
+        * **Overrides**: scheduling knobs (``chunk``, ``detectors``,
+          ``max_queue``, ``snapshot_every_chunks``, ...) may be overridden;
+          the pool shape (``num_slots`` / ``cache_len`` / ``quantized_kv``)
+          is part of the serialized state and cannot change.
+        * With no snapshot committed yet, the engine is built fresh from
+          ``overrides`` alone and recovery is journal-replay only.
+
+        Do not call :meth:`warmup` on the result (it resets the pool); the
+        first chunk compiles on the serving clock instead.
+        """
+        if step is None and ckpt_dir is not None:
+            step = checkpoint.latest_step(ckpt_dir)
+        meta = None
+        if step is not None:
+            meta = cls._read_snapshot_meta(ckpt_dir, step)
+            e = meta["engine"]
+            kw = {
+                "num_slots": e["num_slots"],
+                "cache_len": e["cache_len"],
+                "quantized_kv": e["quantized_kv"],
+                "chunk": e["chunk"],
+                "eos_id": e["eos_id"],
+                "temperature": e["temperature"],
+                "top_k": e["top_k"],
+                "seed": e["seed"],
+                "max_queue": e.get("max_queue"),
+                "shed_policy": e.get("shed_policy", "reject-new"),
+            }
+            for frozen in ("num_slots", "cache_len", "quantized_kv"):
+                if frozen in overrides and overrides[frozen] != kw[frozen]:
+                    raise ValueError(
+                        f"resume cannot change {frozen}: the snapshot pool "
+                        f"was shaped with {kw[frozen]!r} (got "
+                        f"{overrides[frozen]!r}); the pool shape is part of "
+                        f"the serialized state"
+                    )
+            kw.update(overrides)
+        else:
+            kw = dict(overrides)
+        if journal is not None:
+            kw.setdefault("journal", journal)
+        if ckpt_dir is not None:
+            kw.setdefault("snapshot_dir", ckpt_dir)
+        eng = cls(params, cfg, mesh=mesh, rules=rules, **kw)
+        if step is not None:
+            eng._restore_snapshot(ckpt_dir, step, meta)
+        eng._replay_journal()
+        return eng
+
+    def _restore_snapshot(self, ckpt_dir, step: int, meta: dict) -> None:
+        """Install a committed snapshot: device pool through
+        ``checkpoint.restore`` (resharded onto this engine's mesh, if any)
+        plus the host-side slot/queue metadata."""
+        like = {
+            "pool": lm.init_pool_state(
+                self.cfg, self.num_slots, self.cache_len,
+                quantized=self.quantized_kv, abstract=True,
+            )
+        }
+        shardings = None
+        if self.mesh is not None:
+            shardings = {"pool": serve_pool_tree(self._pool_sh)}
+        restored = checkpoint.restore(ckpt_dir, step, like, shardings=shardings)
+        self._set_pool_host(restored["pool"])
+        for slot, rec in enumerate(meta["slots"]):
+            if rec is None:
+                continue
+            t = _ticket_from_record(rec)
+            self._owner[slot] = t.req
+            self._emitted[slot] = [int(x) for x in rec.get("emitted", [])]
+            self._admitted_s[slot] = 0.0  # clocks restart at resume
+            self._trips[slot] = t.trips
+        self._queue = deque(_ticket_from_record(r) for r in meta["queue"])
+        self._chunks_total = int(meta["chunks_total"])
+
+    def _set_pool_host(self, pool: dict) -> None:
+        """Like ``_set_pool`` but for already-placed restored arrays: the
+        non-mesh path keeps ``checkpoint.restore``'s default placement, the
+        mesh path got its shardings at restore time."""
+        self._cache = pool["cache"]
+        self._tok = pool["tok"]
+        self._pos = pool["pos"]
+        self._active = pool["active"]
+        self._remaining = pool["remaining"]
+        self._keys = pool["keys"]
+
+    def _replay_journal(self) -> None:
+        """Reconcile the write-ahead journal against the restored state:
+        finished uids are done exactly once (drop them everywhere); accepted
+        uids absent from both the queue and the slots are replayed."""
+        if self._journal is None:
+            return
+        records = read_journal(self._journal.path)
+        if not records:
+            return
+        finished, accepted = replay_plan(records)
+        deactivate = [
+            slot for slot in range(self.num_slots)
+            if self._owner[slot] is not None
+            and self._owner[slot].uid in finished
+        ]
+        if deactivate:
+            # free the slot host-side and clear its device liveness (the row
+            # decays harmlessly, as in quarantine); done on host so the mesh
+            # placement survives
+            active = np.asarray(jax.device_get(self._active))
+            for slot in deactivate:
+                self._owner[slot] = None
+                self._emitted[slot] = []
+                active[slot] = False
+            if self.mesh is not None:
+                self._active = jax.device_put(active, self._pool_sh["vec"])
+            else:
+                self._active = jnp.asarray(active)
+        self._queue = deque(
+            t for t in self._queue if t.req.uid not in finished
+        )
+        present = {t.req.uid for t in self._queue} | {
+            o.uid for o in self._owner if o is not None
+        }
+        for uid, rec in accepted.items():
+            if uid in present:
+                continue
+            self._queue.append(_ticket_from_record({**rec, "trips": 0}))
+            self._journal_replays += 1
 
     # -- scheduler ----------------------------------------------------------
 
@@ -474,12 +830,38 @@ class Engine:
                 out = out[: hits[0] + 1]
         return out.astype(np.int32), True
 
-    def run(self, requests, *, deadline_s: float = 600.0) -> dict:
+    def _shed_victim(self, now: float) -> _Ticket:
+        """Pick which queued ticket admission control drops, per
+        ``shed_policy`` (see :data:`SHED_POLICIES`)."""
+        q = self._queue
+        if self.shed_policy == "reject-new":
+            return q[-1]
+        if self.shed_policy == "evict-latest-deadline":
+            def effective_deadline(t):
+                r = t.req
+                dl = (float("inf") if r.deadline_s is None
+                      else r.arrival_s + r.deadline_s)
+                return (dl, r.arrival_s, r.uid)
+            return max(q, key=effective_deadline)
+        # shed-by-slo: smallest deadline slack loses (it is least likely to
+        # meet its SLO anyway); deadline-free requests have infinite slack
+        # and shed newest-first so old deadline-free work is not starved
+        def slack(t):
+            r = t.req
+            s = (float("inf") if r.deadline_s is None
+                 else (r.arrival_s + r.deadline_s) - now)
+            return (s, -r.arrival_s, -r.uid)
+        return min(q, key=slack)
+
+    def run(self, requests=(), *, deadline_s: float = 600.0,
+            max_chunks: Optional[int] = None) -> dict:
         """Serve ``requests`` (admitted no earlier than their ``arrival_s``,
         measured on the wall clock from call start) until all complete.
         Returns {uid: Completion} — one per request, each with a structured
         ``status`` — plus aggregate stats and fault/recovery counters under
-        ``self.stats``; nothing raises mid-batch.
+        ``self.stats``; nothing raises mid-batch.  On an engine built by
+        :meth:`resume`, restored work is served first — ``requests`` may be
+        empty.
 
         Deadlines degrade gracefully rather than raising: when the global
         ``deadline_s`` expires, in-flight requests are evicted with their
@@ -493,25 +875,53 @@ class Engine:
         for up to ``quarantine_retries`` fresh approximate-path attempts,
         after which it is re-served on the exact datapath (status
         ``degraded``; ``failed`` if even that is unhealthy).
+
+        Overload: with ``max_queue=`` set, the due-request queue is bounded —
+        once arrivals outrun capacity, the configured ``shed_policy`` picks
+        tickets to drop with status ``rejected`` (empty tokens,
+        ``admitted_s=-1.0``) instead of letting the queue and tail latency
+        grow without bound.  Quarantine re-queues bypass the bound check on
+        entry (they already held a slot) but compete like everyone else
+        afterwards.
+
+        Crash consistency: with a ``journal``, every request's ``accepted``
+        record is fsynced BEFORE any device work and every terminal status
+        writes a ``finished`` record (the durable completion); with
+        ``snapshot_every_chunks=``, the full serving state autosaves at that
+        chunk cadence.  ``max_chunks=`` is the chaos hook: stop dead at that
+        decode-chunk boundary — no draining, no terminal records for
+        in-flight work — exactly what SIGKILL leaves behind
+        (tests/launch/test_engine_snapshot.py, tools/kill_resume_smoke.py).
         """
         requests = list(requests)
         for req in requests:
             # validate the whole trace BEFORE serving starts: a bad request
             # surfacing mid-trace would abandon every in-flight completion
             self._validate(req)
-        queue = deque(
+        if self._journal is not None:
+            # write-ahead: the intake records are durable before any of
+            # these requests can touch a slot
+            for req in sorted(requests, key=lambda r: (r.arrival_s, r.uid)):
+                self._journal.accepted(req)
+        self._arrivals.extend(
             _Ticket(r) for r in sorted(requests, key=lambda r: (r.arrival_s, r.uid))
         )
+        queue, arrivals = self._queue, self._arrivals
         done: dict[int, Completion] = {}
         counters = {
             "faults_detected": 0,
             "quarantine_retries": 0,
             "exact_fallbacks": 0,
             "deadline_evictions": 0,
+            "shed_rejections": 0,
         }
         t0 = time.perf_counter()
         decode_chunks = 0
+        peak_queue_depth = len(queue)
+        queue_depth_sum = 0
+        queue_depth_samples = 0
         expired = False
+        killed = False
 
         def finish(req, tokens, status, now, admitted_s, trips=0):
             done[req.uid] = Completion(
@@ -524,15 +934,24 @@ class Engine:
                 status=status,
                 trips=trips,
             )
+            if self._journal is not None:
+                self._journal.finished(req.uid, status, done[req.uid].tokens)
 
         def overdue(req, now):
             return req.deadline_s is not None and now > req.arrival_s + req.deadline_s
 
-        while queue or any(o is not None for o in self._owner):
+        while queue or arrivals or any(o is not None for o in self._owner):
             now = time.perf_counter() - t0
             if now > deadline_s:
                 expired = True
                 break
+            if max_chunks is not None and decode_chunks >= max_chunks:
+                killed = True  # chaos hook: die at the chunk boundary
+                break
+            # accepted arrivals come due; the bound is enforced below, after
+            # free slots have drained the queue
+            while arrivals and arrivals[0].req.arrival_s <= now:
+                queue.append(arrivals.popleft())
             # evict overdue queued requests before they can take a slot
             if any(overdue(t.req, now) for t in queue):
                 kept = deque()
@@ -542,19 +961,35 @@ class Engine:
                         finish(t.req, [], "evicted", now, -1.0, t.trips)
                     else:
                         kept.append(t)
-                queue = kept
+                queue.clear()
+                queue.extend(kept)
             # admit queued arrivals into free slots
             for slot in range(self.num_slots):
-                if self._owner[slot] is None and queue and queue[0].req.arrival_s <= now:
+                if self._owner[slot] is None and queue:
                     t = queue.popleft()
                     self._admit(t.req, slot, now, trips=t.trips)
+                    if self._journal is not None:
+                        self._journal.admitted(t.req.uid, slot)
+            # overload admission control: requests that could not get a slot
+            # wait in a BOUNDED queue; beyond the bound the shed policy picks
+            # who is turned away (status "rejected")
+            while self.max_queue is not None and len(queue) > self.max_queue:
+                victim = self._shed_victim(now)
+                queue.remove(victim)
+                counters["shed_rejections"] += 1
+                finish(victim.req, [], "rejected", now, -1.0, victim.trips)
+            depth = len(queue)
+            peak_queue_depth = max(peak_queue_depth, depth)
+            queue_depth_sum += depth
+            queue_depth_samples += 1
             if not any(o is not None for o in self._owner):
                 # pool idle: sleep until the next arrival
-                if queue:
-                    time.sleep(max(0.0, queue[0].req.arrival_s - now))
+                if arrivals:
+                    time.sleep(max(0.0, arrivals[0].req.arrival_s - now))
                 continue
             toks, emitted, active, bad, mx = self._decode_chunk()
             decode_chunks += 1
+            self._chunks_total += 1
             now = time.perf_counter() - t0
             for slot in range(self.num_slots):
                 req = self._owner[slot]
@@ -591,6 +1026,20 @@ class Engine:
                     finish(req, self._emitted[slot], "evicted", now,
                            self._admitted_s[slot], self._trips[slot])
                     self._owner[slot] = None
+            if self._journal is not None:
+                live = [
+                    (o.uid, len(self._emitted[s]))
+                    for s, o in enumerate(self._owner)
+                    if o is not None
+                ]
+                if live:
+                    self._journal.progress(live)
+            # autosave at the chunk boundary, after the host bookkeeping
+            # above — the durable cut the kill-and-resume chaos suite
+            # proves exactly-once recovery against
+            if (self.snapshot_every_chunks is not None
+                    and decode_chunks % self.snapshot_every_chunks == 0):
+                self.snapshot()
         if expired:
             now = time.perf_counter() - t0
             for slot in range(self.num_slots):
@@ -601,10 +1050,11 @@ class Engine:
                 finish(req, self._emitted[slot], "evicted", now,
                        self._admitted_s[slot], self._trips[slot])
                 self._owner[slot] = None
-            for t in queue:
+            for t in list(queue) + list(arrivals):
                 counters["deadline_evictions"] += 1
                 finish(t.req, [], "evicted", now, -1.0, t.trips)
             queue.clear()
+            arrivals.clear()
         makespan = time.perf_counter() - t0
         total_tokens = sum(len(c.tokens) for c in done.values())
         by_status = {s: 0 for s in STATUSES}
@@ -617,8 +1067,16 @@ class Engine:
             "decode_chunks": decode_chunks,
             "n_requests": len(done),
             "deadline_expired": expired,
+            "killed": killed,
             "dispatch_faults": self._dispatch_faults,
             "dispatch_retries": self._dispatch_retries,
+            "peak_queue_depth": peak_queue_depth,
+            "mean_queue_depth": (
+                queue_depth_sum / queue_depth_samples
+                if queue_depth_samples else 0.0
+            ),
+            "snapshots_written": self._snapshots_written,
+            "journal_replays": self._journal_replays,
             **counters,
             **{f"n_{s}": by_status[s] for s in STATUSES},
         }

@@ -48,6 +48,7 @@ __all__ = [
     "generate_scan",
     "slot_rows_like",
     "insert_cache_slots",
+    "init_pool_state",
     "prefill_into_slots",
     "decode_slots_scan",
     "sample_tokens",
@@ -701,6 +702,47 @@ def _slot_batch_axis(cfg) -> int:
     """Axis of the batch dim in cache leaves: uniform stacks carry a leading
     stacked-layers axis, so batch is axis 1; per-layer lists put it at 0."""
     return 1 if cfg.uniform else 0
+
+
+def init_pool_state(cfg: ModelConfig, num_slots: int, cache_len: int, *,
+                    quantized: bool = False, key=None, abstract: bool = False):
+    """The engine's complete device-side slot-pool state as ONE pytree::
+
+        {"cache":     lm.init_cache tree (all cache families, float/int8),
+         "tok":       (b, 1) int32   next token each slot feeds,
+         "pos":       (b,)   int32   per-slot position counters,
+         "active":    (b,)   bool    slot liveness,
+         "remaining": (b,)   int32   per-slot generation budgets,
+         "keys":      (b, 2) uint32  per-slot PRNG key pool}
+
+    This single tree is the serialization unit for crash-consistent serving:
+    ``Engine.reset`` builds the live pool from it, ``Engine.snapshot`` writes
+    exactly this tree through ``checkpoint.save``, and ``Engine.resume``
+    passes the ``abstract=True`` form as the restore target (elastic
+    resharding included).  ``key``: split into the per-slot PRNG pool;
+    without it (or in abstract mode) the keys leaf is zeros / a
+    ShapeDtypeStruct of the same (b, 2) uint32 layout.
+    """
+    cache, _ = init_cache(cfg, num_slots, cache_len, quantized=quantized,
+                          abstract=abstract)
+    b = num_slots
+    mk = (
+        (lambda shape, dt: jax.ShapeDtypeStruct(shape, jnp.dtype(dt)))
+        if abstract
+        else (lambda shape, dt: jnp.zeros(shape, dt))
+    )
+    if key is not None and not abstract:
+        keys = jax.random.split(key, b)
+    else:
+        keys = mk((b, 2), jnp.uint32)
+    return {
+        "cache": cache,
+        "tok": mk((b, 1), jnp.int32),
+        "pos": mk((b,), jnp.int32),
+        "active": mk((b,), jnp.bool_),
+        "remaining": mk((b,), jnp.int32),
+        "keys": keys,
+    }
 
 
 def slot_rows_like(cfg: ModelConfig, cache, k: int):

@@ -210,3 +210,61 @@ def test_static_baseline_completes_all(setup):
         assert len(done[r.uid].tokens) == r.max_new_tokens
     assert stats["n_groups"] == 3
     assert stats["tok_s"] > 0
+
+
+def test_completion_never_admitted_edge_cases(setup):
+    """Never-admitted completions — evicted from the queue and rejected by
+    admission control — share one contract: admitted_s=-1.0, empty tokens,
+    a finite non-negative latency_s, and exact status bookkeeping."""
+    cfg, params = setup
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4,
+                 max_queue=1, shed_policy="reject-new")
+    eng.warmup(prompt_lens={3})
+    reqs = [
+        Request(uid=0, prompt=np.arange(3, dtype=np.int32), max_new_tokens=6),
+        # queued behind uid 0 with a hopeless deadline: evicted un-admitted
+        Request(uid=1, prompt=np.arange(3, dtype=np.int32), max_new_tokens=6,
+                deadline_s=1e-9),
+        # arrives once the bounded queue is full: shed un-admitted
+        Request(uid=2, prompt=np.arange(3, dtype=np.int32), max_new_tokens=6),
+        Request(uid=3, prompt=np.arange(3, dtype=np.int32), max_new_tokens=6),
+    ]
+    done = eng.run(reqs)
+    assert done[0].status == "ok"
+    assert done[1].status == "evicted"
+    never_admitted = [c for c in done.values() if c.status in ("evicted", "rejected")]
+    assert any(c.status == "rejected" for c in never_admitted)
+    for c in never_admitted:
+        assert c.admitted_s == -1.0
+        assert len(c.tokens) == 0
+        assert c.prompt_len == 3
+        assert np.isfinite(c.latency_s) and c.latency_s >= 0.0
+        assert c.finished_s >= 0.0
+    assert eng.stats["n_evicted"] == sum(
+        1 for c in done.values() if c.status == "evicted"
+    )
+    assert eng.stats["n_rejected"] == sum(
+        1 for c in done.values() if c.status == "rejected"
+    )
+    assert eng.stats["n_requests"] == len(reqs)
+
+
+def test_queue_ordering_tie_breaks_by_uid(setup):
+    """Requests with IDENTICAL arrival_s are served in uid order (the
+    documented (arrival_s, uid) sort key): with one slot, admitted_s must be
+    monotone in uid, and the emitted tokens still match each solo run."""
+    cfg, params = setup
+    reqs = [
+        Request(uid=u, prompt=np.arange(3, dtype=np.int32) + u,
+                max_new_tokens=2, arrival_s=0.0)
+        for u in (3, 0, 2, 1)  # scrambled construction order
+    ]
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=2)
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs)
+    admits = [done[u].admitted_s for u in (0, 1, 2, 3)]
+    assert admits == sorted(admits)
+    assert all(done[u].finished_s <= done[u + 1].admitted_s + 1e-9
+               for u in (0, 1, 2))
+    for r in reqs:
+        np.testing.assert_array_equal(done[r.uid].tokens, _solo(params, cfg, r))

@@ -1,0 +1,144 @@
+"""Overload admission control: with ``max_queue=`` set the due-request queue
+stays bounded under traffic beyond capacity — the shed policy picks which
+tickets are turned away (status ``rejected``, empty tokens,
+``admitted_s=-1.0``) and the stats surface the backpressure
+(``peak_queue_depth`` / ``mean_queue_depth`` / ``shed_rejections``).
+Requests that DO get slots are unaffected: their tokens still match the solo
+run exactly.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import (
+    SHED_POLICIES,
+    STATUSES,
+    Engine,
+    Request,
+    solo_generate,
+)
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _burst(cfg, n, *, seed=0, gen=6, deadline_s=None):
+    """n requests all due at t=0 — a burst far beyond one slot's capacity."""
+    rng = np.random.RandomState(seed)
+    dl = deadline_s if deadline_s is not None else [None] * n
+    return [
+        Request(
+            uid=i,
+            prompt=rng.randint(0, cfg.vocab, size=3).astype(np.int32),
+            max_new_tokens=gen,
+            deadline_s=dl[i],
+        )
+        for i in range(n)
+    ]
+
+
+def test_bounded_queue_reject_new(setup):
+    """1 slot, 6-request burst, max_queue=2: the queue never exceeds its
+    bound, excess is rejected (never admitted, empty tokens), and every
+    request that got a slot still matches its solo run bit-exactly."""
+    cfg, params = setup
+    reqs = _burst(cfg, 6)
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4,
+                 max_queue=2, shed_policy="reject-new")
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs)
+    assert set(done) == {r.uid for r in reqs}
+    assert eng.stats["peak_queue_depth"] <= 2
+    rejected = {u for u, c in done.items() if c.status == "rejected"}
+    served = {u for u, c in done.items() if c.status == "ok"}
+    assert rejected and served
+    assert rejected | served == set(done)  # statuses partition the batch
+    assert eng.stats["shed_rejections"] == len(rejected)
+    assert eng.stats["n_rejected"] == len(rejected)
+    for u in rejected:
+        c = done[u]
+        assert c.admitted_s == -1.0 and len(c.tokens) == 0
+        assert c.latency_s >= 0.0
+    for u in served:
+        r = reqs[u]
+        np.testing.assert_array_equal(
+            done[u].tokens,
+            solo_generate(params, cfg, r.prompt, r.max_new_tokens, cache_len=24),
+        )
+    # reject-new sheds from the tail: the earliest arrivals are the survivors
+    assert served == set(sorted(done)[: len(served)])
+
+
+def test_shed_policy_evict_latest_deadline(setup):
+    """The queued request whose effective deadline is furthest away (none =
+    infinity) loses its place — urgent work is protected."""
+    cfg, params = setup
+    # uid 0 occupies the slot; 1..3 queue up.  uid 3 has NO deadline
+    # (effective deadline = infinity) -> it is the shed victim even though
+    # uid 1's generous deadline arrived earlier.
+    reqs = _burst(cfg, 4, deadline_s=[None, 500.0, 400.0, None])
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4,
+                 max_queue=2, shed_policy="evict-latest-deadline")
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs)
+    assert done[3].status == "rejected"
+    assert all(done[u].status == "ok" for u in (0, 1, 2))
+
+
+def test_shed_policy_shed_by_slo(setup):
+    """The queued request with the SMALLEST deadline slack is shed — it was
+    least likely to meet its SLO anyway."""
+    cfg, params = setup
+    # queued: uid 1 (tight 0.001s deadline -> hopeless), uids 2-3 roomy
+    reqs = _burst(cfg, 4, deadline_s=[None, 0.001, 500.0, 500.0])
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4,
+                 max_queue=2, shed_policy="shed-by-slo")
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs)
+    # the hopeless request is dropped (shed as the worst-slack victim, or
+    # evicted by its own deadline if that fired first) — never served
+    assert done[1].status in ("rejected", "evicted")
+    assert len(done[1].tokens) == 0
+    assert all(done[u].status == "ok" for u in (0, 2, 3))
+
+
+def test_unbounded_by_default(setup):
+    """Without max_queue, nothing is ever rejected — the pre-PR contract."""
+    cfg, params = setup
+    reqs = _burst(cfg, 5, gen=3)
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4)
+    eng.warmup(prompt_lens={3})
+    done = eng.run(reqs)
+    assert all(c.status == "ok" for c in done.values())
+    assert eng.stats["n_rejected"] == 0
+    assert eng.stats["peak_queue_depth"] == len(reqs) - 1  # all but the admitted head
+    assert eng.stats["mean_queue_depth"] >= 0.0
+
+
+def test_backpressure_stats_surface(setup):
+    cfg, params = setup
+    reqs = _burst(cfg, 4, gen=3)
+    eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=4, max_queue=1)
+    eng.warmup(prompt_lens={3})
+    eng.run(reqs)
+    for key in ("peak_queue_depth", "mean_queue_depth", "shed_rejections",
+                "snapshots_written", "journal_replays", "n_rejected"):
+        assert key in eng.stats, key
+    assert eng.stats["peak_queue_depth"] <= 1
+    assert eng.stats["snapshots_written"] == 0  # no autosave configured
+
+
+def test_invalid_admission_config_rejected(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="shed_policy"):
+        Engine(params, cfg, num_slots=1, cache_len=24, shed_policy="nope")
+    with pytest.raises(ValueError, match="max_queue"):
+        Engine(params, cfg, num_slots=1, cache_len=24, max_queue=0)
+    assert "rejected" in STATUSES and len(SHED_POLICIES) == 3

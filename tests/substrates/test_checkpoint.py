@@ -65,3 +65,87 @@ def test_idempotent_save(tmp_path, tree):
     p1 = ck.save(tmp_path, 6, tree)
     p2 = ck.save(tmp_path, 6, tree)
     assert p1 == p2
+
+
+def test_stale_tmp_swept_by_latest_step_and_save(tmp_path, tree):
+    """tmp-<step> dirs left by a crashed writer are garbage by the commit
+    protocol: both latest_step and save sweep them."""
+    ck.save(tmp_path, 2, tree)
+    stale = tmp_path / "tmp-7"
+    stale.mkdir()
+    (stale / "params_w.npy").write_bytes(b"half a leaf")
+    assert ck.latest_step(tmp_path) == 2
+    assert not stale.exists()  # swept
+    stale.mkdir()
+    ck.save(tmp_path, 8, tree)
+    assert not stale.exists()  # save sweeps too
+    assert ck.latest_step(tmp_path) == 8
+
+
+def test_async_writer_error_reraised_by_wait_pending(tmp_path, tree):
+    """A failed async writer must not die silently in its daemon thread:
+    wait_pending re-raises the first writer error as CheckpointError."""
+    ck.wait_pending()  # drain any strays from other tests
+    # a FILE where the step dir must go -> mkdir fails inside the writer
+    clash = tmp_path / "ck"
+    clash.write_text("not a directory")
+    t = ck.save_async(clash, 1, tree)
+    t.join()
+    with pytest.raises(ck.CheckpointError, match="step 1"):
+        ck.wait_pending()
+    ck.wait_pending()  # the error is delivered once, then the queue is clean
+
+
+def test_restore_missing_step_names_latest(tmp_path, tree):
+    ck.save(tmp_path, 3, tree)
+    with pytest.raises(ck.CheckpointError, match=r"step-9.*latest committed step.*3"):
+        ck.restore(tmp_path, 9, tree)
+
+
+def test_restore_torn_leaf_names_file(tmp_path, tree):
+    """Deleting one committed leaf file simulates a torn checkpoint: the
+    error names the missing leaf file instead of a numpy traceback."""
+    ck.save(tmp_path, 5, tree)
+    (tmp_path / "step-5" / "params_w.npy").unlink()
+    with pytest.raises(ck.CheckpointError, match=r"torn.*params_w\.npy"):
+        ck.restore(tmp_path, 5, tree)
+
+
+def test_restore_corrupt_leaf_names_file(tmp_path, tree):
+    ck.save(tmp_path, 5, tree)
+    (tmp_path / "step-5" / "opt_m.npy").write_bytes(b"\x00\x01garbage")
+    with pytest.raises(ck.CheckpointError, match=r"opt_m\.npy.*unreadable"):
+        ck.restore(tmp_path, 5, tree)
+
+
+def test_restore_shape_mismatch_names_leaf(tmp_path, tree):
+    ck.save(tmp_path, 5, tree)
+    wrong = {
+        "params": {"w": jnp.zeros((2, 2)), "b": jnp.ones((4,))},
+        "opt": {"m": jnp.zeros((3, 4)), "step": jnp.int32(0)},
+    }
+    with pytest.raises(ck.CheckpointError, match=r"params_w.*shape"):
+        ck.restore(tmp_path, 5, wrong)
+
+
+def test_restore_ignores_extra_leaves(tmp_path, tree):
+    """Leaves present in the checkpoint but absent from the restore target
+    are skipped — Engine.resume restores just the pool subtree this way."""
+    ck.save(tmp_path, 5, {**tree, "extra": jnp.arange(3)})
+    out = ck.restore(tmp_path, 5, tree)
+    assert "extra" not in out
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+
+
+def test_roundtrip_extension_dtype(tmp_path):
+    """bf16 leaves round-trip: numpy stores them as raw void bytes and
+    restore reinterprets against the target dtype."""
+    tree16 = {"w": jnp.arange(8.0, dtype=jnp.bfloat16), "i": jnp.arange(3)}
+    ck.save(tmp_path, 1, tree16)
+    out = ck.restore(tmp_path, 1, tree16)
+    assert out["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out["w"], np.float32), np.asarray(tree16["w"], np.float32)
+    )
