@@ -45,6 +45,23 @@ Artifact: ``experiments/results/engine_bench_overload.json``, gated (warn
 mode) by the committed baseline.  Extra knobs:
     REPRO_ENGINE_BENCH_MAX_QUEUE (default 2 * slots)
 
+Accuracy-SLO lane (``--slo`` or REPRO_ENGINE_BENCH_SLO=1): the guarded
+engine vs today's engine on the same trace — stride=∞ must be bit-exact
+(anchor invariant), canaries must be read-only (tokens still bit-exact), a
+stride sweep prices the shadow-exact recompute (default-stride overhead is
+the warn-gated headline, contract <= ~5% tok/s), a guarded clean run with
+budgets derived from the measured natural error must never demote, and
+seeded high-bit ``sqrt_man`` pressure must demote with post-demotion
+admissions token-exact vs the solo exact run.  Artifact:
+``experiments/results/engine_bench_slo.json``, gated (warn mode) by the
+committed baseline.  Extra knobs:
+    REPRO_ENGINE_BENCH_SLO_STRIDE       (default 32, the headline stride)
+    REPRO_ENGINE_BENCH_SLO_STRIDES      (default "8,<stride>,128", sweep)
+    REPRO_ENGINE_BENCH_SLO_FAULT_STRIDE (default 4, faulted-run stride)
+    REPRO_ENGINE_BENCH_SLO_FAULT_RATE   (default 1.0)
+    REPRO_ENGINE_BENCH_SLO_FAULT_BIT    (default 21, pinned mantissa bit)
+    REPRO_ENGINE_BENCH_SLO_FAULT_SEED   (default 7)
+
 Mesh lane (``--mesh`` or REPRO_ENGINE_BENCH_MESH=1): replays the same trace
 through the engine on a forced-host-device ``(data=2, model=2)`` mesh, in
 both serving shardings — ``exact`` (params replicated, slots sharded over
@@ -77,6 +94,7 @@ from repro.configs import get_smoke_config
 from repro.core import FaultConfig
 from repro.launch.engine import (
     STATUSES,
+    AccuracySLO,
     Engine,
     Request,
     run_static_baseline,
@@ -210,6 +228,217 @@ def _run_faults_lane(params, cfg, reqs, *, arch, slots, cache_len, chunk,
         raise AssertionError(
             "health detectors perturbed fault-free decode: detectors-on "
             "tokens diverged from detectors-off"
+        )
+    return payload
+
+
+def _run_slo_lane(params, cfg, reqs, *, arch, slots, cache_len, chunk,
+                  prompts, gens, reps):
+    """Accuracy-SLO lane (docs/robustness.md §Accuracy SLO).
+
+    Five probes of the guarded engine against the unguarded one on the same
+    trace: (1) SLO configured but stride=∞ must be BIT-EXACT vs today's
+    engine (anchor invariant); (2) canaries at the default stride are
+    read-only — tokens still bit-exact — and measure the approximate
+    datapath's natural max relative logit error R_clean; (3) a stride sweep
+    prices the shadow-exact recompute (the default-stride overhead is the
+    warn-gated headline, contract <= ~5% decode tok/s); (4) a guarded clean
+    run with budgets derived from R_clean must never demote; (5) under a
+    seeded high-bit sqrt_man fault schedule the guarded engine MUST demote,
+    and fresh requests admitted into demoted (exact-rung) slots must be
+    token-exact vs the solo exact-datapath run.
+    """
+    stride = int(os.environ.get("REPRO_ENGINE_BENCH_SLO_STRIDE", 32))
+    strides = _env_ints("REPRO_ENGINE_BENCH_SLO_STRIDES", f"8,{stride},128")
+    fstride = int(os.environ.get("REPRO_ENGINE_BENCH_SLO_FAULT_STRIDE", 4))
+    frate = float(os.environ.get("REPRO_ENGINE_BENCH_SLO_FAULT_RATE", 1.0))
+    fbit = int(os.environ.get("REPRO_ENGINE_BENCH_SLO_FAULT_BIT", 21))
+    fseed = int(os.environ.get("REPRO_ENGINE_BENCH_SLO_FAULT_SEED", 7))
+    fault_cfg = FaultConfig("sqrt_man", frate, seed=fseed, bit=fbit)
+    # budgets off: huge relative budget, no divergence trigger — measures
+    # the canary itself, never trips the ladder
+    unbudgeted = dict(rel_err_budget=1e9, divergence_budget=None,
+                      promote_after=None)
+
+    def best_of(run_reqs=reqs, **engine_kw):
+        eng = Engine(params, cfg, num_slots=slots, cache_len=cache_len,
+                     chunk=chunk, **engine_kw)
+        eng.warmup(prompt_lens=prompts)
+        done = best = None
+        for _ in range(max(1, reps)):
+            eng.reset()
+            d = eng.run(run_reqs)
+            if best is None or eng.stats["tok_s"] > best["tok_s"]:
+                done, best = d, dict(eng.stats, **_latencies(d))
+        return done, best
+
+    # (1) + baseline: unguarded engine, then stride=∞ (ladder routed, no
+    # canaries) — the anchor invariant is bit-exactness between the two
+    done_base, s_base = best_of()
+    done_inf, s_inf = best_of(slo=AccuracySLO(canary_stride=None, **unbudgeted))
+    parity_inf = all(
+        np.array_equal(done_inf[r.uid].tokens, done_base[r.uid].tokens)
+        for r in reqs
+    )
+
+    # (2)+(3) canary stride sweep, budgets off: overhead + read-only check
+    sweep = {}
+    canary_exact = True
+    r_clean = 0.0
+    for st in sorted(set(strides)):
+        done_c, s_c = best_of(slo=AccuracySLO(canary_stride=st, **unbudgeted))
+        ovh = (1.0 - s_c["tok_s"] / max(s_base["tok_s"], 1e-9)) * 100.0
+        sweep[st] = {
+            "tok_s": s_c["tok_s"],
+            "overhead_pct": ovh,
+            "canary_checks": s_c["canary_checks"],
+            "canary_divergences": s_c["canary_divergences"],
+            "canary_max_rel_err": s_c["canary_max_rel_err"],
+        }
+        canary_exact = canary_exact and all(
+            np.array_equal(done_c[r.uid].tokens, done_base[r.uid].tokens)
+            for r in reqs
+        )
+        r_clean = max(r_clean, s_c["canary_max_rel_err"])
+    overhead_pct = sweep[stride]["overhead_pct"]
+
+    # (4) guarded clean run: the relative-error budget scaled off the
+    # measured natural error — 4x headroom over the worst clean canary,
+    # floored at 5% — must not trip.  The divergence trigger stays OFF
+    # here: an approximate datapath legitimately flips near-tie argmaxes at
+    # a low natural rate (the sweep measures it), so token-divergence is a
+    # per-deployment policy knob, not a clean-run invariant
+    budget = max(4.0 * r_clean, 0.05)
+    clean_div_rate = (
+        sum(v["canary_divergences"] for v in sweep.values())
+        / max(sum(v["canary_checks"] for v in sweep.values()), 1)
+    )
+    guarded = AccuracySLO(canary_stride=stride, rel_err_budget=budget,
+                          divergence_budget=None, promote_after=None)
+    _, s_clean = best_of(slo=guarded)
+
+    # (5) seeded sqrt_man pressure: the guarded engine must demote, and
+    # fresh requests admitted into demoted slots must match the solo exact
+    # run bit-for-bit (the rung IS the exact datapath, prefill included)
+    fg = AccuracySLO(canary_stride=fstride, rel_err_budget=budget,
+                     divergence_budget=0, promote_after=None)
+    eng_f = Engine(params, cfg, num_slots=slots, cache_len=cache_len,
+                   chunk=chunk, faults=fault_cfg, slo=fg)
+    eng_f.warmup(prompt_lens=prompts)
+    done_f = eng_f.run(reqs)
+    s_f = dict(eng_f.stats, **_latencies(done_f))
+    demotions = int(s_f["demotions"])
+    rng = np.random.RandomState(fseed + 1)
+    probes = [
+        Request(
+            uid=100_000 + i,
+            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.choice(gens)),
+        )
+        for i in range(2 * slots)
+    ]
+    done_p = eng_f.run(probes)
+    ecfg = lm.exact_twin(eng_f.cfg)
+    post_exact = True
+    post_compared = 0
+    for p in probes:
+        c = done_p[p.uid]
+        # only probes that spent their whole life on the exact rung carry
+        # the bit-exactness guarantee (a mid-request demotion mixes rungs)
+        if c.unit_final != "exact" or c.unit_trips or c.status != "ok":
+            continue
+        post_compared += 1
+        ref = solo_generate(params, ecfg, p.prompt, p.max_new_tokens,
+                            cache_len=cache_len)
+        post_exact = post_exact and np.array_equal(c.tokens, ref)
+
+    n = len(reqs)
+    rows = [
+        ["unguarded", f"{s_base['tok_s']:.0f}", "-", "-", "-"],
+        ["slo stride=inf", f"{s_inf['tok_s']:.0f}", "0", "0",
+         "bit-exact" if parity_inf else "DIVERGED"],
+    ] + [
+        [f"canary stride={st}", f"{v['tok_s']:.0f}",
+         f"{v['canary_checks']}", f"{v['overhead_pct']:+.1f}%",
+         f"maxrel {v['canary_max_rel_err']:.3g}"]
+        for st, v in sorted(sweep.items())
+    ] + [
+        [f"guarded clean (b={budget:.3g})", f"{s_clean['tok_s']:.0f}",
+         f"{s_clean['canary_checks']}", "-",
+         f"{s_clean['demotions']} demotions"],
+        [f"faulted[sqrt_man bit={fbit}]", f"{s_f['tok_s']:.0f}",
+         f"{s_f['canary_checks']}", "-",
+         f"{demotions} demotions, rungs {list(eng_f.unit_levels)}"],
+    ]
+    print(f"\n== Accuracy-SLO lane ({arch}, slots={slots}, n={n}, "
+          f"chunk={chunk}, default stride={stride}) ==")
+    print(md_table(["engine", "tok/s", "canaries", "overhead", "slo"], rows))
+    print(f"stride=inf bit-exact: {parity_inf} | canary read-only bit-exact: "
+          f"{canary_exact} | R_clean={r_clean:.4g} -> budget={budget:.4g} | "
+          f"clean demotions={s_clean['demotions']} | faulted demotions="
+          f"{demotions} | post-demotion exact parity: {post_exact} "
+          f"({post_compared} probes)")
+
+    payload = {
+        "arch": arch,
+        "num_slots": slots,
+        "n_requests": n,
+        "chunk": chunk,
+        "canary_stride": stride,
+        "stride_sweep": {str(k): v for k, v in sweep.items()},
+        "canary_overhead_pct": overhead_pct,
+        "slo_parity_token_exact": bool(parity_inf),
+        "canary_token_exact": bool(canary_exact),
+        "r_clean_max_rel_err": r_clean,
+        "clean_divergence_rate": clean_div_rate,
+        "rel_err_budget": budget,
+        "clean_run_demotions": int(s_clean["demotions"]),
+        "fault_site": "sqrt_man",
+        "fault_rate": frate,
+        "fault_bit": fbit,
+        "fault_seed": fseed,
+        "fault_stride": fstride,
+        "demoted_under_faults": demotions,
+        "faulted_unit_levels": list(eng_f.unit_levels),
+        "post_demotion_token_exact": bool(post_exact),
+        "post_demotion_probes_compared": post_compared,
+        "unguarded": s_base,
+        "guarded_clean": s_clean,
+        "faulted": s_f,
+    }
+    save("engine_bench_slo", payload)
+    # after save, so the JSON survives for debugging
+    if not parity_inf:
+        raise AssertionError(
+            "SLO anchor broken: stride=inf guarded engine diverged from the "
+            "unguarded engine (must be bit-exact)"
+        )
+    if not canary_exact:
+        raise AssertionError(
+            "shadow-exact canary perturbed served tokens: canary-on decode "
+            "diverged from the unguarded engine"
+        )
+    if s_clean["demotions"] != 0:
+        raise AssertionError(
+            f"guarded clean run demoted {s_clean['demotions']} slots with "
+            f"budget {budget:.4g} (R_clean {r_clean:.4g}) — budget "
+            f"derivation or canary stats are wrong"
+        )
+    if demotions < 1:
+        raise AssertionError(
+            f"seeded sqrt_man pressure (rate={frate}, bit={fbit}) did not "
+            f"demote any slot — the SLO guard is not firing"
+        )
+    if post_compared < 1:
+        raise AssertionError(
+            "no post-demotion probe spent its whole life on the exact rung "
+            "— cannot certify post-demotion exactness"
+        )
+    if not post_exact:
+        raise AssertionError(
+            "post-demotion tokens diverged from the solo exact-datapath run"
         )
     return payload
 
@@ -360,7 +589,7 @@ def _run_overload_lane(params, cfg, *, arch, slots, cache_len, chunk,
 
 
 def run(mesh_lane: bool = False, faults_lane: bool = False,
-        overload_lane: bool = False):
+        overload_lane: bool = False, slo_lane: bool = False):
     arch = os.environ.get("REPRO_ENGINE_BENCH_ARCH", "qwen3-4b")
     slots = int(os.environ.get("REPRO_ENGINE_BENCH_SLOTS", 4))
     n_requests = int(os.environ.get("REPRO_ENGINE_BENCH_REQUESTS", 32))
@@ -377,6 +606,7 @@ def run(mesh_lane: bool = False, faults_lane: bool = False,
     overload_lane = (
         overload_lane or os.environ.get("REPRO_ENGINE_BENCH_OVERLOAD", "") == "1"
     )
+    slo_lane = slo_lane or os.environ.get("REPRO_ENGINE_BENCH_SLO", "") == "1"
     if mesh_lane and jax.device_count() < 4:
         raise RuntimeError(
             "mesh lane needs >= 4 devices: run `python -m benchmarks.engine_bench "
@@ -412,6 +642,11 @@ def run(mesh_lane: bool = False, faults_lane: bool = False,
             params, cfg, arch=arch, slots=slots, cache_len=cache_len,
             chunk=chunk, prompts=prompts, gens=gens, seed=seed,
             n_requests=n_requests,
+        )
+    if slo_lane:
+        return _run_slo_lane(
+            params, cfg, reqs, arch=arch, slots=slots, cache_len=cache_len,
+            chunk=chunk, prompts=prompts, gens=gens, reps=reps,
         )
 
     # best-of-N replays per scheduler: both replay the same trace; scheduler
@@ -534,9 +769,16 @@ def main():
              "Poisson replays at 0.5x/1x/2x saturation, shed-policy "
              "comparison (artifact: engine_bench_overload.json)",
     )
+    ap.add_argument(
+        "--slo", action="store_true",
+        help="run the accuracy-SLO lane instead: stride=inf bit-exactness, "
+             "canary overhead stride sweep, demotion correctness under "
+             "seeded sqrt_man pressure and post-demotion exact parity "
+             "(artifact: engine_bench_slo.json)",
+    )
     args = ap.parse_args()
     run(mesh_lane=args.mesh, faults_lane=args.faults,
-        overload_lane=args.overload)
+        overload_lane=args.overload, slo_lane=args.slo)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ SUITES = (
     "engine_bench",     # continuous batching vs lock-step static (informational)
     "engine_bench_faults",  # detector overhead + fault recovery (warn gate input)
     "engine_bench_overload",  # bounded-queue admission control (warn gate input)
+    "engine_bench_slo",  # accuracy-SLO canaries + datapath ladder (warn gate input)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 
@@ -31,6 +32,7 @@ ALIASES = {
     "kernels_bench_compiled": ("kernels_bench", {"backend": "compiled"}),
     "engine_bench_faults": ("engine_bench", {"faults_lane": True}),
     "engine_bench_overload": ("engine_bench", {"overload_lane": True}),
+    "engine_bench_slo": ("engine_bench", {"slo_lane": True}),
 }
 
 

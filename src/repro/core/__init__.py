@@ -11,8 +11,8 @@ from repro.core.e2afs import e2afs_rsqrt, e2afs_sqrt
 from repro.core.esas import esas_sqrt
 from repro.core.exact import exact_rsqrt, exact_sqrt
 from repro.core.faults import FAULT_SITES, FaultConfig
-from repro.core.metrics import ErrorMetrics, error_metrics
-from repro.core.units import SqrtUnit, available_units, get_unit
+from repro.core.metrics import ErrorMetrics, error_metrics, sampled_normal_values
+from repro.core.units import SqrtUnit, available_units, get_unit, resolve_ladder
 
 __all__ = [
     "FAULT_SITES",
@@ -25,7 +25,9 @@ __all__ = [
     "exact_sqrt",
     "ErrorMetrics",
     "error_metrics",
+    "sampled_normal_values",
     "SqrtUnit",
     "available_units",
     "get_unit",
+    "resolve_ladder",
 ]

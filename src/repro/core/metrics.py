@@ -10,11 +10,17 @@ import dataclasses
 from typing import Callable
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.numerics import FP16, FloatFormat
+from repro.core.numerics import FP16, FP32, FloatFormat
 
-__all__ = ["ErrorMetrics", "error_metrics", "positive_normal_values"]
+__all__ = [
+    "ErrorMetrics",
+    "error_metrics",
+    "positive_normal_values",
+    "sampled_normal_values",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,23 +52,60 @@ def positive_normal_values(fmt: FloatFormat = FP16) -> np.ndarray:
     return bits.view(np.dtype(fmt.dtype.name if fmt.name != "bf16" else "uint16"))
 
 
+def sampled_normal_values(
+    fmt: FloatFormat = FP32, *, mans_per_exp: int = 256
+) -> np.ndarray:
+    """A deterministic stratified grid of positive normals for formats too
+    wide to enumerate: EVERY normal exponent, crossed with ``mans_per_exp``
+    evenly spaced mantissa codes (endpoints included, so exact powers of two
+    and the top-of-binade values are always in the grid).  For fp32 at the
+    default density that is 254 × 256 ≈ 65k points — the same size as the
+    exhaustive fp16 domain, covering the full 2^-126..2^128 dynamic range.
+    No RNG: the grid is a pure function of (fmt, mans_per_exp), so sampled
+    metrics are reproducible across runs and machines."""
+    mans_per_exp = int(mans_per_exp)
+    if mans_per_exp < 1:
+        raise ValueError(f"mans_per_exp must be >= 1, got {mans_per_exp}")
+    exps = np.arange(1, fmt.exp_mask, dtype=np.uint64)  # normals: 1..emax-1
+    n = min(mans_per_exp, fmt.one)
+    mans = np.unique(
+        np.linspace(0, fmt.one - 1, n).round().astype(np.uint64)
+    )
+    bits = ((exps[:, None] << fmt.man_bits) | mans[None, :]).reshape(-1)
+    ints = bits.astype(np.dtype(fmt.uint_dtype.name))
+    # bitcast through jax: uniform across formats, including bf16 (whose
+    # dtype plain numpy cannot name)
+    return np.asarray(jax.lax.bitcast_convert_type(jnp.asarray(ints), fmt.dtype))
+
+
 def error_metrics(
     approx_fn: Callable,
     fmt: FloatFormat = FP16,
     *,
     reference: str = "sqrt",
+    mans_per_exp: int = 256,
 ) -> ErrorMetrics:
-    """Exhaustive error metrics of ``approx_fn`` against the exact function.
+    """Error metrics of ``approx_fn`` against the exact function.
 
-    ``approx_fn`` maps an array of ``fmt.dtype`` to the same dtype.  Errors are
-    evaluated in float64, per the paper: ED = |approx - exact|.
+    ``approx_fn`` maps an array of ``fmt.dtype`` to the same dtype.  Errors
+    are evaluated in float64, per the paper: ED = |approx - exact|.  A
+    16-bit ``fmt`` is evaluated exhaustively over its complete positive
+    normal space (the paper's Table-3 protocol); a wider format falls back
+    to the :func:`sampled_normal_values` stratified grid (``mans_per_exp``
+    sets its density) — every exponent is still covered, only the mantissa
+    axis is subsampled, which is the axis piecewise-linear sqrt
+    approximations vary smoothly along.
     """
-    if fmt is not FP16:
-        raise NotImplementedError("paper metrics are defined on FP16")
-    exps = np.arange(1, fmt.exp_mask, dtype=np.uint32)
-    mans = np.arange(fmt.one, dtype=np.uint32)
-    bits = ((exps[:, None] << fmt.man_bits) | mans[None, :]).reshape(-1)
-    x = bits.astype(np.uint16).view(np.float16)
+    if fmt.total_bits == 16:
+        exps = np.arange(1, fmt.exp_mask, dtype=np.uint32)
+        mans = np.arange(fmt.one, dtype=np.uint32)
+        bits = ((exps[:, None] << fmt.man_bits) | mans[None, :]).reshape(-1)
+        ints = bits.astype(np.uint16)
+        x = np.asarray(
+            jax.lax.bitcast_convert_type(jnp.asarray(ints), fmt.dtype)
+        )
+    else:
+        x = sampled_normal_values(fmt, mans_per_exp=mans_per_exp)
 
     y_app = np.asarray(approx_fn(jnp.asarray(x))).astype(np.float64)
     xf = x.astype(np.float64)

@@ -41,7 +41,7 @@ from repro.core import cwaha, e2afs, esas, exact
 from repro.core.faults import FaultConfig, flip_float_bits
 from repro.kernels.dispatch import make_differentiable_rsqrt, make_differentiable_sqrt
 
-__all__ = ["SqrtUnit", "get_unit", "available_units"]
+__all__ = ["SqrtUnit", "get_unit", "available_units", "resolve_ladder"]
 
 
 def _kernel_sqrt(x, **kw):
@@ -160,3 +160,22 @@ def get_unit(
 
 def available_units():
     return tuple(_REGISTRY)
+
+
+def resolve_ladder(names, *, faults: Optional[FaultConfig] = None):
+    """Resolve an accuracy-SLO demotion ladder into `SqrtUnit`s.
+
+    A ladder walks approximate → exact (docs/robustness.md §Accuracy SLO):
+    rung 0 is the serving datapath and the only rung that sees ``faults``;
+    demoted rungs are always clean, so demotion moves a slot OFF the faulty
+    datapath.  The last rung must be "exact" (the ladder's floor is the
+    reference datapath, making post-demotion decode deterministic).
+    """
+    names = tuple(names)
+    if len(names) < 2:
+        raise ValueError(f"ladder needs >= 2 rungs (approx -> exact), got {names!r}")
+    if names[-1] != "exact":
+        raise ValueError(f"ladder must end at 'exact', got {names!r}")
+    return tuple(
+        get_unit(n, faults=faults if i == 0 else None) for i, n in enumerate(names)
+    )

@@ -60,6 +60,23 @@ uninterrupted run.  Overload is admission-controlled: ``max_queue=`` bounds
 the due-request queue and a ``shed_policy`` (``reject-new`` /
 ``evict-latest-deadline`` / ``shed-by-slo``) picks what to drop (status
 ``rejected``) when traffic exceeds capacity.
+
+Accuracy SLO (docs/robustness.md §Accuracy SLO): ``slo=AccuracySLO(...)``
+makes the *silently* approximate datapath self-guarding — the detectors
+above only fire on loud failures (non-finite, magnitude blow-up), but an
+approximate sqrt unit can drift tokens off the exact output without ever
+tripping one.  Every ``canary_stride``-th decode step the jitted chunk
+recomputes that step's logits through the exact datapath from the same
+cache read (a shadow, not a second dispatch) and reduces per-slot
+divergence gauges onto the chunk's single host sync; a slot over its
+argmax-divergence or relative-logit-error budget is demoted one rung down
+a per-slot datapath ladder (e.g. ``e2afs → exact``) mid-request without
+re-prefill, and promoted back after ``promote_after`` consecutive clean
+canaries.  Slot rungs are sticky across admissions, persist through
+snapshot/resume, and are journaled (``demoted``/``promoted`` records), so
+a crash during degraded mode resumes degraded.  ``telemetry=`` streams
+per-chunk gauges as JSONL (launch/telemetry.py).  With ``slo=None`` the
+engine traces the exact same computation as before the SLO existed.
 """
 from __future__ import annotations
 
@@ -82,6 +99,7 @@ from repro.core.faults import (
     FaultConfig,
     logits_hook as _make_logits_hook,
 )
+from repro.core.units import resolve_ladder
 from repro.distributed.constraints import axis_rules
 from repro.distributed.sharding import (
     serve_pool_shardings,
@@ -89,7 +107,13 @@ from repro.distributed.sharding import (
     serve_rules,
     shardings_for,
 )
-from repro.launch.journal import RequestJournal, read_journal, replay_plan
+from repro.launch.journal import (
+    RequestJournal,
+    read_journal,
+    replay_plan,
+    replay_unit_levels,
+)
+from repro.launch.telemetry import Telemetry
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -97,6 +121,7 @@ __all__ = [
     "Request",
     "Completion",
     "Engine",
+    "AccuracySLO",
     "run_static_baseline",
     "solo_generate",
     "STATUSES",
@@ -124,6 +149,63 @@ SHED_POLICIES = ("reject-new", "evict-latest-deadline", "shed-by-slo")
 
 # snapshot meta-blob layout version (bumped on incompatible change)
 _SNAPSHOT_FORMAT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracySLO:
+    """Accuracy service-level objective for :class:`Engine` (``slo=``).
+
+    * ``ladder`` — datapath rung names, approximate → exact.  ``None``
+      resolves to ``(cfg.sqrt_unit, "exact")``.  Rung 0 must be the serving
+      config's own ``sqrt_unit`` and the last rung must be ``"exact"``
+      (``ModelConfig.validate`` pins both); only rung 0 sees injected sqrt
+      faults, so one demotion steps out of a seeded fault schedule.
+    * ``canary_stride`` — run one shadow-exact canary per slot every this
+      many decode steps, counted on the engine's *lifetime* step clock so
+      the cadence survives chunk boundaries, resets and resume.  ``None``
+      means ∞: never canary — the ladder still routes, but nothing can trip
+      it and served tokens stay bit-exact vs an SLO-free engine.
+    * ``rel_err_budget`` — demote a slot one rung when a chunk's worst
+      canary max-relative logit error (max|served − exact| / max|exact|)
+      exceeds this.
+    * ``divergence_budget`` — demote when MORE than this many canary argmax
+      divergences accumulate at the slot's current rung (0 = the first
+      divergent token demotes).  ``None`` disables the divergence trigger.
+    * ``promote_after`` — promote one rung back up after this many
+      consecutive clean canaries (hysteresis: a demotion needs sustained
+      clean evidence to unwind).  ``None`` disables promotion — demotions
+      stick for the engine's lifetime, which is what the deterministic
+      post-demotion parity checks want.
+    """
+
+    ladder: Optional[tuple] = None
+    canary_stride: Optional[int] = 32
+    rel_err_budget: float = 0.25
+    divergence_budget: Optional[int] = 0
+    promote_after: Optional[int] = 4
+
+    def __post_init__(self):
+        if self.ladder is not None:
+            object.__setattr__(self, "ladder", tuple(self.ladder))
+        if self.canary_stride is not None and self.canary_stride < 1:
+            raise ValueError(
+                f"canary_stride must be >= 1 when set (None = never canary); "
+                f"got {self.canary_stride}"
+            )
+        if not self.rel_err_budget > 0:
+            raise ValueError(
+                f"rel_err_budget must be positive, got {self.rel_err_budget}"
+            )
+        if self.divergence_budget is not None and self.divergence_budget < 0:
+            raise ValueError(
+                f"divergence_budget must be >= 0 when set, "
+                f"got {self.divergence_budget}"
+            )
+        if self.promote_after is not None and self.promote_after < 1:
+            raise ValueError(
+                f"promote_after must be >= 1 when set (None = demotions "
+                f"stick), got {self.promote_after}"
+            )
 
 
 def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
@@ -169,6 +251,14 @@ class Completion:
     health detectors quarantined this request before it finished.  A request
     evicted straight from the queue (never admitted) has ``admitted_s=-1.0``
     and empty ``tokens``.
+
+    With an accuracy SLO configured (docs/robustness.md §Accuracy SLO) the
+    request also carries its canary audit trail: ``unit_final`` names the
+    datapath rung its slot sat on when it finished, ``canary_checks`` /
+    ``canary_divergences`` count the shadow-exact canaries (and argmax
+    disagreements) run against it, and ``unit_trips`` records every
+    demotion/promotion event that fired while it held the slot.  All stay
+    at their defaults without an SLO (or for never-admitted requests).
     """
 
     uid: int
@@ -179,6 +269,10 @@ class Completion:
     finished_s: float
     status: str = "ok"
     trips: int = 0
+    unit_final: Optional[str] = None
+    canary_checks: int = 0
+    canary_divergences: int = 0
+    unit_trips: tuple = ()
 
     @property
     def latency_s(self) -> float:
@@ -259,7 +353,9 @@ class Engine:
                  shed_policy: str = "reject-new",
                  snapshot_dir=None,
                  snapshot_every_chunks: Optional[int] = None,
-                 journal=None):
+                 journal=None,
+                 slo: Optional[AccuracySLO] = None,
+                 telemetry=None):
         if num_slots < 1 or cache_len < 2 or chunk < 1:
             raise ValueError(
                 f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
@@ -289,6 +385,33 @@ class Engine:
         # host-side.  The degradation ladder strips all of them via exact_twin.
         if faults is not None and faults.targets_sqrt:
             cfg = cfg.replace(sqrt_faults=faults)
+        if slo is not None and not isinstance(slo, AccuracySLO):
+            raise TypeError(f"slo must be an AccuracySLO (got {type(slo)!r})")
+        self.slo = slo
+        if slo is not None:
+            ladder = (slo.ladder if slo.ladder is not None
+                      else (cfg.sqrt_unit, "exact"))
+            if ladder[0] != cfg.sqrt_unit:
+                raise ValueError(
+                    f"slo.ladder rung 0 must be the serving config's "
+                    f"sqrt_unit {cfg.sqrt_unit!r} (got {ladder[0]!r}) — the "
+                    f"ladder demotes FROM the configured datapath"
+                )
+            resolve_ladder(ladder)  # shape/name validation, fail fast
+            self._ladder: Optional[tuple] = tuple(ladder)
+            # the ladder rides the frozen config so the jitted steps key
+            # their caches on it and decode accepts a per-row rung vector
+            cfg = cfg.replace(sqrt_ladder=self._ladder)
+        else:
+            self._ladder = None
+        self._canary_stride = (
+            0 if slo is None or slo.canary_stride is None
+            else int(slo.canary_stride)
+        )
+        if telemetry is None or isinstance(telemetry, Telemetry):
+            self._telemetry = telemetry
+        else:
+            self._telemetry = Telemetry(telemetry)
         self.cfg = cfg
         self.num_slots = num_slots
         self.cache_len = cache_len
@@ -340,47 +463,7 @@ class Engine:
 
         base_key = self._base_key
 
-        def admit_fn(p, cache, tok, pos, active, remaining, keys, prompt,
-                     slots, budgets, uids):
-            """One fused admission step: ragged prefill into the live cache
-            plus all per-slot pool-state updates (first token sampled
-            in-device with the same per-request stream the decode chunks
-            use, position = prompt length, budget, a uid-keyed PRNG
-            stream) — a single dispatch per admission instead of a pile of
-            eager ops."""
-            with rules_ctx():
-                logits, cache = lm.prefill_into_slots(p, cfg, cache, prompt, slots)
-                new_keys = jax.vmap(lambda u: jax.random.fold_in(base_key, u))(uids)
-                # the prompt's last token sits at position s-1, so its
-                # successor draws from fold_in(key, s-1) — exactly what
-                # decode_slots_scan does for every later token
-                last_pos = jnp.full((prompt.shape[0],), prompt.shape[1] - 1, jnp.int32)
-                first = lm.sample_tokens(
-                    logits[:, -1, :].astype(jnp.float32), last_pos, new_keys,
-                    temperature, top_k,
-                )
-                tok = tok.at[slots, 0].set(first)
-                pos = pos.at[slots].set(prompt.shape[1])
-                active = active.at[slots].set(True)
-                remaining = remaining.at[slots].set(budgets)
-                keys = keys.at[slots].set(new_keys)
-                return cache, tok, pos, active, remaining, keys
-
-        hook = self._hook
-        with_health = self.detectors
-
-        def decode_fn(p, c, tok, pos, act, rem, keys):
-            with rules_ctx():
-                return lm.decode_slots_scan(
-                    p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
-                    temperature=temperature, top_k=top_k, keys=keys,
-                    with_health=with_health, logits_hook=hook,
-                )
-
-        if mesh is None:
-            self._admit_j = jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
-            self._decode_j = jax.jit(decode_fn, donate_argnums=(1, 2, 3, 4, 5))
-        else:
+        if mesh is not None:
             # explicit in/out shardings: the pool state keeps its committed
             # placement through every donated step (no resharding between
             # chunks) and scheduler-side host operands stay replicated
@@ -388,24 +471,100 @@ class Engine:
             pool_in = (sh["cache"], sh["tok"], sh["vec"], sh["vec"], sh["vec"],
                        sh["keys"])
             rep = sh["replicated"]
-            self._admit_j = jax.jit(
+
+        def make_admit(acfg):
+            """Build the jitted admission step for one datapath config.
+            Without an SLO there is exactly one (the serving config); with a
+            ladder there is one per rung — a request admitted into a demoted
+            slot must PREFILL on that slot's rung too, because the KV cache
+            is datapath-dependent (qk-norm routes cached keys through the
+            sqrt unit), so mixing an approximate prefill with exact decode
+            would break the post-demotion exactness guarantee."""
+
+            def admit_fn(p, cache, tok, pos, active, remaining, keys, prompt,
+                         slots, budgets, uids):
+                """One fused admission step: ragged prefill into the live
+                cache plus all per-slot pool-state updates (first token
+                sampled in-device with the same per-request stream the
+                decode chunks use, position = prompt length, budget, a
+                uid-keyed PRNG stream) — a single dispatch per admission
+                instead of a pile of eager ops."""
+                with rules_ctx():
+                    logits, cache = lm.prefill_into_slots(
+                        p, acfg, cache, prompt, slots
+                    )
+                    new_keys = jax.vmap(
+                        lambda u: jax.random.fold_in(base_key, u)
+                    )(uids)
+                    # the prompt's last token sits at position s-1, so its
+                    # successor draws from fold_in(key, s-1) — exactly what
+                    # decode_slots_scan does for every later token
+                    last_pos = jnp.full(
+                        (prompt.shape[0],), prompt.shape[1] - 1, jnp.int32
+                    )
+                    first = lm.sample_tokens(
+                        logits[:, -1, :].astype(jnp.float32), last_pos,
+                        new_keys, temperature, top_k,
+                    )
+                    tok = tok.at[slots, 0].set(first)
+                    pos = pos.at[slots].set(prompt.shape[1])
+                    active = active.at[slots].set(True)
+                    remaining = remaining.at[slots].set(budgets)
+                    keys = keys.at[slots].set(new_keys)
+                    return cache, tok, pos, active, remaining, keys
+
+            if mesh is None:
+                return jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+            return jax.jit(
                 admit_fn,
                 donate_argnums=(1, 2, 3, 4, 5, 6),
                 in_shardings=(self._param_sh, *pool_in, rep, rep, rep, rep),
                 out_shardings=pool_in,
             )
+
+        self._make_admit = make_admit
+        # ladder level -> jitted admit; level 0 (the serving datapath) is
+        # the only entry most runs ever build
+        self._admit_jits: dict = {0: make_admit(cfg)}
+
+        hook = self._hook
+        with_health = self.detectors
+        slo_on = slo is not None
+        canary_stride = self._canary_stride
+
+        def decode_fn(p, c, tok, pos, act, rem, keys, *slo_args):
+            with rules_ctx():
+                kw = {}
+                if slo_on:
+                    levels, offset = slo_args
+                    kw = dict(unit_levels=levels, canary_stride=canary_stride,
+                              canary_offset=offset)
+                return lm.decode_slots_scan(
+                    p, cfg, c, tok, pos, act, rem, chunk, eos_id=eos_id,
+                    temperature=temperature, top_k=top_k, keys=keys,
+                    with_health=with_health, logits_hook=hook, **kw,
+                )
+
+        if mesh is None:
+            self._decode_j = jax.jit(decode_fn, donate_argnums=(1, 2, 3, 4, 5))
+        else:
             # toks/emitted (b, chunk) follow the slot sharding (batch over
             # data, time replicated); the carried pool state keeps its
-            # committed placement; the (b,) health signals ride the same
-            # per-slot vector sharding
+            # committed placement; the (b,) health and canary signals ride
+            # the same per-slot vector sharding
+            decode_in = (self._param_sh, *pool_in)
             decode_out = (sh["tok"], sh["tok"], sh["tok"], sh["vec"],
                           sh["vec"], sh["vec"], sh["cache"])
             if with_health:
                 decode_out = decode_out + (sh["vec"], sh["vec"])
+            if slo_on:
+                decode_in = decode_in + (sh["vec"], rep)  # levels, offset
+                if canary_stride:
+                    decode_out = decode_out + (sh["vec"],) * 4
             self._decode_j = jax.jit(
                 decode_fn,
                 donate_argnums=(1, 2, 3, 4, 5),
-                in_shardings=(self._param_sh, *pool_in),
+                in_shardings=decode_in,
                 out_shardings=decode_out,
             )
         self.reset()
@@ -436,8 +595,36 @@ class Engine:
         self._snapshots_written = 0
         self._journal_replays = 0
         self._chunks_total = getattr(self, "_chunks_total", 0)
+        # accuracy-SLO slot state (all-zeros and inert without slo=): the
+        # ladder rung each slot decodes at, the promotion hysteresis streak,
+        # divergences at the current rung, and per-request canary audit
+        # fields (the last four reset at _admit; the rung itself is STICKY —
+        # a demoted slot serves its next occupant on the demoted rung too,
+        # because the KV cache it prefills into is datapath-dependent)
+        self._unit_levels = np.zeros(b, np.int32)
+        self._clean_streak = np.zeros(b, np.int32)
+        self._rung_div = np.zeros(b, np.int32)
+        self._slot_canary_checks = np.zeros(b, np.int64)
+        self._slot_canary_div = np.zeros(b, np.int64)
+        self._slot_events: list[list] = [[] for _ in range(b)]
         if self._injector is not None:
             self._injector.reset()
+
+    @property
+    def unit_levels(self) -> tuple:
+        """Per-slot ladder rung indices (0 = the serving datapath).  Empty
+        without an accuracy SLO."""
+        if self._ladder is None:
+            return ()
+        return tuple(int(x) for x in self._unit_levels)
+
+    @property
+    def unit_names(self) -> tuple:
+        """Per-slot datapath names at the current rungs; empty without an
+        accuracy SLO."""
+        if self._ladder is None:
+            return ()
+        return tuple(self._ladder[int(x)] for x in self._unit_levels)
 
     def _pool_state(self) -> dict:
         """The live device pool as the single ``lm.init_pool_state`` tree —
@@ -519,6 +706,8 @@ class Engine:
                 "seed": self.seed,
                 "max_queue": self.max_queue,
                 "shed_policy": self.shed_policy,
+                "slo": (None if self.slo is None
+                        else dataclasses.asdict(self.slo)),
             },
             "chunks_total": int(self._chunks_total),
             "slots": slots_meta,
@@ -527,6 +716,18 @@ class Engine:
             "queue": [_ticket_record(t) for t in self._queue]
             + [_ticket_record(t) for t in self._arrivals],
         }
+        if self._ladder is not None:
+            # additive key (format unchanged: readers without an SLO ignore
+            # it) — the authoritative copy of the ladder state; the journal's
+            # demoted/promoted trail is the flushed-not-fsynced shadow
+            meta["slo"] = {
+                "unit_levels": [int(x) for x in self._unit_levels],
+                "clean_streak": [int(x) for x in self._clean_streak],
+                "rung_div": [int(x) for x in self._rung_div],
+                "canary_checks": [int(x) for x in self._slot_canary_checks],
+                "canary_divergences": [int(x) for x in self._slot_canary_div],
+                "events": [list(e) for e in self._slot_events],
+            }
         blob = np.frombuffer(json.dumps(meta).encode("utf-8"), np.uint8)
         path = checkpoint.save(
             ckpt_dir, step, {"pool": self._pool_state(), "meta": blob}
@@ -609,6 +810,12 @@ class Engine:
                 "max_queue": e.get("max_queue"),
                 "shed_policy": e.get("shed_policy", "reject-new"),
             }
+            s = e.get("slo")
+            if s is not None:
+                s = dict(s)
+                if s.get("ladder") is not None:
+                    s["ladder"] = tuple(s["ladder"])
+                kw["slo"] = AccuracySLO(**s)
             for frozen in ("num_slots", "cache_len", "quantized_kv"):
                 if frozen in overrides and overrides[frozen] != kw[frozen]:
                     raise ValueError(
@@ -655,6 +862,21 @@ class Engine:
             self._trips[slot] = t.trips
         self._queue = deque(_ticket_from_record(r) for r in meta["queue"])
         self._chunks_total = int(meta["chunks_total"])
+        self._restored_step = int(step)
+        s = meta.get("slo")
+        if s is not None and self._ladder is not None:
+            top = len(self._ladder) - 1
+            clamp = lambda xs: np.asarray(  # noqa: E731
+                [min(max(int(x), 0), top) for x in xs], np.int32
+            )
+            self._unit_levels = clamp(s["unit_levels"])
+            self._clean_streak = np.asarray(s["clean_streak"], np.int32)
+            self._rung_div = np.asarray(s["rung_div"], np.int32)
+            self._slot_canary_checks = np.asarray(s["canary_checks"], np.int64)
+            self._slot_canary_div = np.asarray(
+                s["canary_divergences"], np.int64
+            )
+            self._slot_events = [list(e) for e in s["events"]]
 
     def _set_pool_host(self, pool: dict) -> None:
         """Like ``_set_pool`` but for already-placed restored arrays: the
@@ -686,7 +908,8 @@ class Engine:
             # free the slot host-side and clear its device liveness (the row
             # decays harmlessly, as in quarantine); done on host so the mesh
             # placement survives
-            active = np.asarray(jax.device_get(self._active))
+            # np.array (copy): device_get can hand back a read-only view
+            active = np.array(jax.device_get(self._active))
             for slot in deactivate:
                 self._owner[slot] = None
                 self._emitted[slot] = []
@@ -706,6 +929,24 @@ class Engine:
                 continue
             self._queue.append(_ticket_from_record({**rec, "trips": 0}))
             self._journal_replays += 1
+        if self._ladder is not None:
+            # ladder trips journaled AFTER the restored snapshot override
+            # its rungs (the crash happened mid-degradation); with no
+            # snapshot the whole trail reconstructs best-effort, so a crash
+            # during degraded mode resumes degraded either way
+            recs = records
+            restored = getattr(self, "_restored_step", None)
+            if restored is not None:
+                marks = [
+                    i for i, r in enumerate(records)
+                    if r.get("kind") == "snapshot" and r.get("step") == restored
+                ]
+                if marks:
+                    recs = records[marks[-1] + 1:]
+            top = len(self._ladder) - 1
+            for slot, lv in replay_unit_levels(recs).items():
+                if 0 <= slot < self.num_slots:
+                    self._unit_levels[slot] = min(max(int(lv), 0), top)
 
     # -- scheduler ----------------------------------------------------------
 
@@ -770,12 +1011,28 @@ class Engine:
             time.sleep(self.dispatch_backoff_s * (2 ** (attempts - 1)))
         return fn(*args)
 
+    def _admit_jit_for(self, level: int):
+        """The jitted admission step for a ladder rung, built lazily: most
+        runs never demote, so only rung 0 (built in __init__) ever traces."""
+        j = self._admit_jits.get(level)
+        if j is None:
+            # a non-zero rung prefills on that rung's unit, fault-free and
+            # ladder-free (the rung IS the datapath; decode re-selects per
+            # row via unit_levels)
+            acfg = self.cfg.replace(
+                sqrt_unit=self._ladder[level], sqrt_faults=None,
+                sqrt_ladder=None,
+            )
+            j = self._admit_jits[level] = self._make_admit(acfg)
+        return j
+
     def _admit(self, req: Request, slot: int, now: float, trips: int = 0):
         self._validate(req)
+        level = 0 if self._ladder is None else int(self._unit_levels[slot])
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
         (self._cache, self._tok, self._pos, self._active, self._remaining,
          self._keys) = self._dispatch(
-            self._admit_j,
+            self._admit_jit_for(level),
             self.params, self._cache, self._tok, self._pos, self._active,
             self._remaining, self._keys, prompt,
             np.asarray([slot], np.int32),
@@ -787,25 +1044,109 @@ class Engine:
         self._emitted[slot] = []
         self._admitted_s[slot] = now
         self._trips[slot] = trips
+        # request-scoped SLO state resets with the new occupant; the rung
+        # itself (and its divergence count / streak) is slot-scoped
+        self._slot_canary_checks[slot] = 0
+        self._slot_canary_div[slot] = 0
+        self._slot_events[slot] = []
 
     def _decode_chunk(self):
-        out = self._dispatch(
-            self._decode_j,
-            self.params, self._cache, self._tok, self._pos, self._active,
-            self._remaining, self._keys,
-        )
+        args = (self.params, self._cache, self._tok, self._pos, self._active,
+                self._remaining, self._keys)
+        if self.slo is not None:
+            # per-row rung vector + the lifetime step offset that keeps the
+            # canary cadence global across chunks/resets/resume (values are
+            # plain operands — no retrace as they change)
+            args = args + (
+                np.asarray(self._unit_levels, np.int32),
+                np.int32(self._chunks_total * self.chunk),
+            )
+        out = self._dispatch(self._decode_j, *args)
+        (toks, emitted, self._tok, self._pos, self._active,
+         self._remaining, self._cache) = out[:7]
+        i = 7
         if self.detectors:
-            (toks, emitted, self._tok, self._pos, self._active,
-             self._remaining, self._cache, bad, mx) = out
+            bad, mx = out[i], out[i + 1]
+            i += 2
         else:
-            (toks, emitted, self._tok, self._pos, self._active,
-             self._remaining, self._cache) = out
             bad = jnp.zeros((self.num_slots,), bool)
             mx = jnp.zeros((self.num_slots,), jnp.float32)
-        # ONE device->host sync per chunk: tokens, emission mask, liveness
-        # and the health signals come back together (separate np.asarray
-        # round-trips measurably dominate the smoke-scale serve loop)
-        return jax.device_get((toks, emitted, self._active, bad, mx))
+        if self.slo is not None and self._canary_stride:
+            cc, cd, cmr, crs = out[i:i + 4]
+        else:
+            cc = cd = np.zeros((self.num_slots,), np.int32)
+            cmr = crs = np.zeros((self.num_slots,), np.float32)
+        # ONE device->host sync per chunk: tokens, emission mask, liveness,
+        # the health signals and the canary gauges come back together
+        # (separate np.asarray round-trips measurably dominate the
+        # smoke-scale serve loop)
+        return jax.device_get((toks, emitted, self._active, bad, mx,
+                               cc, cd, cmr, crs))
+
+    def _slo_update(self, cc, cd, cmr, counters) -> None:
+        """Apply one chunk's canary gauges to the per-slot ladder: demote a
+        slot one rung when it blew a budget this chunk, promote one rung
+        after ``promote_after`` consecutive clean canaries.  Runs BEFORE the
+        chunk's finish bookkeeping so a request that ends this chunk sees
+        its final rung and full canary trail in its Completion."""
+        slo, ladder = self.slo, self._ladder
+        top = len(ladder) - 1
+        for slot in range(self.num_slots):
+            n = int(cc[slot])
+            if n == 0:
+                continue  # no canary fired for this slot this chunk
+            dv = int(cd[slot])
+            mr = float(cmr[slot])
+            counters["canary_checks"] += n
+            counters["canary_divergences"] += dv
+            counters["canary_max_rel_err"] = max(
+                counters["canary_max_rel_err"], mr
+            )
+            self._slot_canary_checks[slot] += n
+            self._slot_canary_div[slot] += dv
+            self._rung_div[slot] += dv
+            level = int(self._unit_levels[slot])
+            owner = self._owner[slot]
+            uid = None if owner is None else owner.uid
+            over_div = (slo.divergence_budget is not None
+                        and int(self._rung_div[slot]) > slo.divergence_budget)
+            over_rel = mr > slo.rel_err_budget
+            if over_div or over_rel:
+                self._clean_streak[slot] = 0
+                if level < top:
+                    level += 1
+                    self._unit_levels[slot] = level
+                    self._rung_div[slot] = 0
+                    counters["demotions"] += 1
+                    event = {
+                        "event": "demoted", "level": level,
+                        "unit": ladder[level],
+                        "chunk": int(self._chunks_total),
+                        "max_rel_err": mr, "divergences": dv,
+                    }
+                    self._slot_events[slot].append(event)
+                    if self._journal is not None:
+                        self._journal.demoted(slot, uid, level, ladder[level])
+            elif dv:
+                # divergent but within budget: hysteresis restarts anyway
+                self._clean_streak[slot] = 0
+            elif level > 0:
+                self._clean_streak[slot] += n
+                if (slo.promote_after is not None
+                        and int(self._clean_streak[slot]) >= slo.promote_after):
+                    level -= 1
+                    self._unit_levels[slot] = level
+                    self._clean_streak[slot] = 0
+                    self._rung_div[slot] = 0
+                    counters["promotions"] += 1
+                    event = {
+                        "event": "promoted", "level": level,
+                        "unit": ladder[level],
+                        "chunk": int(self._chunks_total),
+                    }
+                    self._slot_events[slot].append(event)
+                    if self._journal is not None:
+                        self._journal.promoted(slot, uid, level, ladder[level])
 
     def _exact_fallback(self, req: Request):
         """The bottom rung of the degradation ladder: serve one request solo
@@ -914,16 +1255,30 @@ class Engine:
             "exact_fallbacks": 0,
             "deadline_evictions": 0,
             "shed_rejections": 0,
+            "canary_checks": 0,
+            "canary_divergences": 0,
+            "canary_max_rel_err": 0.0,
+            "demotions": 0,
+            "promotions": 0,
         }
         t0 = time.perf_counter()
         decode_chunks = 0
         peak_queue_depth = len(queue)
         queue_depth_sum = 0
         queue_depth_samples = 0
+        telemetry_tokens = 0
         expired = False
         killed = False
 
-        def finish(req, tokens, status, now, admitted_s, trips=0):
+        def finish(req, tokens, status, now, admitted_s, trips=0, slot=None):
+            audit = {}
+            if slot is not None and self._ladder is not None:
+                audit = dict(
+                    unit_final=self._ladder[int(self._unit_levels[slot])],
+                    canary_checks=int(self._slot_canary_checks[slot]),
+                    canary_divergences=int(self._slot_canary_div[slot]),
+                    unit_trips=tuple(self._slot_events[slot]),
+                )
             done[req.uid] = Completion(
                 uid=req.uid,
                 prompt_len=len(req.prompt),
@@ -933,6 +1288,7 @@ class Engine:
                 finished_s=now,
                 status=status,
                 trips=trips,
+                **audit,
             )
             if self._journal is not None:
                 self._journal.finished(req.uid, status, done[req.uid].tokens)
@@ -987,10 +1343,16 @@ class Engine:
                 if arrivals:
                     time.sleep(max(0.0, arrivals[0].req.arrival_s - now))
                 continue
-            toks, emitted, active, bad, mx = self._decode_chunk()
+            toks, emitted, active, bad, mx, cc, cd, cmr, _crs = (
+                self._decode_chunk()
+            )
             decode_chunks += 1
             self._chunks_total += 1
             now = time.perf_counter() - t0
+            if self.slo is not None and self._canary_stride:
+                # ladder bookkeeping first, so requests finishing this chunk
+                # carry their final rung + canary trail in the Completion
+                self._slo_update(cc, cd, cmr, counters)
             for slot in range(self.num_slots):
                 req = self._owner[slot]
                 if req is None:
@@ -1014,17 +1376,17 @@ class Engine:
                         tokens, healthy = self._exact_fallback(req)
                         now = time.perf_counter() - t0
                         finish(req, tokens, "degraded" if healthy else "failed",
-                               now, self._admitted_s[slot], trips)
+                               now, self._admitted_s[slot], trips, slot=slot)
                     continue
                 self._emitted[slot].extend(toks[slot][emitted[slot]].tolist())
                 if not active[slot]:  # finished: free the slot for reuse
                     finish(req, self._emitted[slot], "ok", now,
-                           self._admitted_s[slot], self._trips[slot])
+                           self._admitted_s[slot], self._trips[slot], slot=slot)
                     self._owner[slot] = None
                 elif overdue(req, now):  # per-request deadline: partial out
                     counters["deadline_evictions"] += 1
                     finish(req, self._emitted[slot], "evicted", now,
-                           self._admitted_s[slot], self._trips[slot])
+                           self._admitted_s[slot], self._trips[slot], slot=slot)
                     self._owner[slot] = None
             if self._journal is not None:
                 live = [
@@ -1034,6 +1396,31 @@ class Engine:
                 ]
                 if live:
                     self._journal.progress(live)
+            if self._telemetry is not None:
+                n_active = sum(o is not None for o in self._owner)
+                if self._ladder is not None:
+                    hist: dict = {}
+                    for lv in self._unit_levels:
+                        name = self._ladder[int(lv)]
+                        hist[name] = hist.get(name, 0) + 1
+                else:
+                    hist = {self.cfg.sqrt_unit: self.num_slots}
+                chunk_tokens = int(np.sum(emitted))
+                telemetry_tokens += chunk_tokens
+                self._telemetry.emit({
+                    "kind": "chunk",
+                    "t": now,
+                    "chunk": int(self._chunks_total),
+                    "active_slots": n_active,
+                    "slot_occupancy": n_active / self.num_slots,
+                    "queue_depth": depth,
+                    "tokens": chunk_tokens,
+                    "tok_s": telemetry_tokens / max(now, 1e-9),
+                    "canary_checks": int(np.sum(cc)),
+                    "canary_divergences": int(np.sum(cd)),
+                    "canary_max_rel": float(np.max(cmr)) if len(cmr) else 0.0,
+                    "unit_levels": hist,
+                })
             # autosave at the chunk boundary, after the host bookkeeping
             # above — the durable cut the kill-and-resume chaos suite
             # proves exactly-once recovery against
@@ -1048,7 +1435,7 @@ class Engine:
                     continue
                 counters["deadline_evictions"] += 1
                 finish(req, self._emitted[slot], "evicted", now,
-                       self._admitted_s[slot], self._trips[slot])
+                       self._admitted_s[slot], self._trips[slot], slot=slot)
                 self._owner[slot] = None
             for t in list(queue) + list(arrivals):
                 counters["deadline_evictions"] += 1
@@ -1077,6 +1464,8 @@ class Engine:
             ),
             "snapshots_written": self._snapshots_written,
             "journal_replays": self._journal_replays,
+            "telemetry": (None if self._telemetry is None
+                          else str(self._telemetry.path)),
             **counters,
             **{f"n_{s}": by_status[s] for s in STATUSES},
         }

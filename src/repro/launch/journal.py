@@ -17,6 +17,13 @@ One record per line, ``{"kind": ..., "t": <wall-clock seconds>, ...}``:
                record: once this line is fsynced the request is done exactly
                once, and a resume must not re-serve it
     snapshot   step — marks that an engine snapshot committed at this point
+    demoted    slot, uid, level, unit — accuracy-SLO ladder trip: the slot
+               now decodes at ladder rung ``level`` (``unit`` names it)
+    promoted   slot, uid, level, unit — hysteresis recovery, one rung up
+
+Readers MUST tolerate unknown kinds: newer writers add record kinds (the
+SLO kinds above arrived after the v1 journal) and an old reader replaying a
+new journal skips what it does not understand instead of failing the resume.
 
 Durable records (``accepted``/``finished``/``snapshot``) are flushed and
 fsynced per append; high-rate ``progress``/``admitted`` records are flushed
@@ -39,7 +46,7 @@ import os
 import time
 from pathlib import Path
 
-__all__ = ["RequestJournal", "read_journal", "replay_plan"]
+__all__ = ["RequestJournal", "read_journal", "replay_plan", "replay_unit_levels"]
 
 # record kinds that must survive a kill the instant append() returns
 _DURABLE = ("accepted", "finished", "snapshot")
@@ -102,6 +109,21 @@ class RequestJournal:
     def snapshot(self, step: int) -> dict:
         return self.append("snapshot", step=int(step))
 
+    def demoted(self, slot: int, uid, level: int, unit: str) -> dict:
+        """Accuracy-SLO ladder trip (non-durable: flushed, not fsynced —
+        snapshot meta is the durable record; this one makes journal-only
+        resume best-effort degraded instead of optimistically approximate)."""
+        return self.append(
+            "demoted", slot=int(slot),
+            uid=None if uid is None else int(uid), level=int(level), unit=unit,
+        )
+
+    def promoted(self, slot: int, uid, level: int, unit: str) -> dict:
+        return self.append(
+            "promoted", slot=int(slot),
+            uid=None if uid is None else int(uid), level=int(level), unit=unit,
+        )
+
     def close(self) -> None:
         if self._f is not None and not self._f.closed:
             self._f.close()
@@ -142,3 +164,17 @@ def replay_plan(records) -> tuple[dict, dict]:
         if r.get("kind") == "accepted" and r["uid"] not in finished
     }
     return finished, accepted
+
+
+def replay_unit_levels(records) -> dict:
+    """Reconstruct the accuracy-SLO per-slot ladder levels from the
+    ``demoted``/``promoted`` trail: ``{slot: level}``, last record wins.
+    Companion to :func:`replay_plan` for journal-only resume — a crash
+    during degraded mode resumes degraded (best-effort: these kinds are
+    flushed, not fsynced; the snapshot meta is the authoritative copy).
+    Slots with no trip records are absent (they stay at rung 0)."""
+    levels: dict = {}
+    for r in records:
+        if r.get("kind") in ("demoted", "promoted"):
+            levels[int(r["slot"])] = int(r["level"])
+    return levels

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.distributed.constraints import constrain
-from repro.layers.norms import rmsnorm
+from repro.layers.norms import rmsnorm, rmsnorm_select
 from repro.layers.param import DenseInit, zeros
 from repro.layers.rope import apply_rope
 
@@ -45,13 +45,23 @@ def attention_init(ini: DenseInit, cfg, *, cross: bool = False):
     del cross
 
 
-def _project_qkv(p, cfg, xq, xkv, q_positions, kv_positions, *, use_rope):
+def _project_qkv(p, cfg, xq, xkv, q_positions, kv_positions, *, use_rope, norm_levels=None):
     q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
     k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
     v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
     if cfg.qk_norm:
-        q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
-        k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
+        if norm_levels is not None and cfg.sqrt_ladder is not None:
+            # accuracy-SLO decode: each slot's qk-norm rsqrt follows the
+            # slot's current ladder rung (docs/robustness.md §Accuracy SLO)
+            q = rmsnorm_select(
+                p["q_norm"], q, norm_levels, ladder=cfg.sqrt_ladder, faults=cfg.sqrt_faults
+            )
+            k = rmsnorm_select(
+                p["k_norm"], k, norm_levels, ladder=cfg.sqrt_ladder, faults=cfg.sqrt_faults
+            )
+        else:
+            q = rmsnorm(p["q_norm"], q, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
+            k = rmsnorm(p["k_norm"], k, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
     if use_rope:
         q = apply_rope(q, q_positions, theta=cfg.rope_theta)
         k = apply_rope(k, kv_positions, theta=cfg.rope_theta)
@@ -409,7 +419,8 @@ def attention_prefill(p, cfg, x, cache, positions, *, window: Optional[int] = No
 
 
 def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
-                     layer_idx=None, kernel: Optional[str] = None):
+                     layer_idx=None, kernel: Optional[str] = None,
+                     norm_levels=None):
     """Single-token decode. x: (b, 1, d); cache holds ``cache_len`` slots.
 
     ``pos`` is either a scalar (lock-step batch: every row at the same
@@ -426,6 +437,10 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     Pallas decode-attention kernel via the dispatch layer; "reference" runs
     the kernel's pure-jnp oracle (same math, useful for bisecting).  The
     projections, cache write and wo projection are identical on every route.
+
+    ``norm_levels`` (accuracy-SLO serving, (b,) int32): per-slot ladder rung
+    for the qk-norm rsqrt when ``cfg.sqrt_ladder`` is set; None keeps the
+    single-datapath path bit-for-bit.
     """
     b, s, d = x.shape
     assert s == 1
@@ -440,7 +455,7 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     kv_pos_q = pos[:, None] if per_slot else jnp.asarray([0], jnp.int32) + pos
     use_rope = cfg.pos == "rope"
     q, k_new, v_new = _project_qkv(
-        p, cfg, x, x, kv_pos_q, kv_pos_q, use_rope=use_rope
+        p, cfg, x, x, kv_pos_q, kv_pos_q, use_rope=use_rope, norm_levels=norm_levels
     )
     # mesh serving (no-ops single-device): per serve_rules the token line each
     # row writes is kv-head-sharded like the cache itself, so the per-slot

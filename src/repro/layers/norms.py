@@ -10,10 +10,34 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import get_unit
+from repro.core import get_unit, resolve_ladder
 from repro.layers.param import DenseInit, ones, zeros
 
-__all__ = ["rmsnorm_init", "rmsnorm", "layernorm_init", "layernorm"]
+__all__ = [
+    "rmsnorm_init",
+    "rmsnorm",
+    "rmsnorm_select",
+    "layernorm_init",
+    "layernorm",
+    "layernorm_select",
+]
+
+
+def _select_inv(ms, levels, ladder, faults, ndim):
+    """rsqrt of ``ms`` through every ladder rung, per-row selected by ``levels``.
+
+    ``ms`` has shape ``x.shape[:-1] + (1,)``; ``levels`` is ``(b,)`` over the
+    leading (slot) axis.  Rows at level 0 select exactly the rung-0 rsqrt
+    output — bit-identical to the single-unit path, which is the accuracy-SLO
+    parity anchor (docs/robustness.md §Accuracy SLO).  Faults ride rung 0 only.
+    """
+    units = resolve_ladder(ladder, faults=faults)
+    invs = [u.rsqrt(ms) for u in units]
+    lv = levels.reshape((levels.shape[0],) + (1,) * (ndim - 1))
+    inv = invs[-1]
+    for j in range(len(units) - 2, -1, -1):
+        inv = jnp.where(lv == j, invs[j], inv)
+    return inv
 
 
 def rmsnorm_init(ini: DenseInit, name: str, d: int):
@@ -46,6 +70,17 @@ def rmsnorm(
     return (xf * inv).astype(dt) * (1.0 + scale.astype(dt))
 
 
+def rmsnorm_select(scale, x, levels, *, ladder, eps: float = 1e-6, faults=None):
+    """Per-row ladder variant of :func:`rmsnorm` for accuracy-SLO decode:
+    row ``i`` routes its rsqrt through ``ladder[levels[i]]``.  The mean-square
+    reduction is computed once; only the (tiny) rsqrt runs per rung."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    inv = _select_inv(ms + eps, levels, ladder, faults, x.ndim)
+    return (xf * inv).astype(dt) * (1.0 + scale.astype(dt))
+
+
 def layernorm_init(ini: DenseInit, name: str, d: int):
     ini.add(f"{name}_scale", (d,), ("embed",), init=ones)
     ini.add(f"{name}_bias", (d,), ("embed",), init=zeros)
@@ -58,4 +93,14 @@ def layernorm(scale, bias, x, *, sqrt_unit: str = "exact", eps: float = 1e-5, fa
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
     inv = unit.rsqrt(var + eps)
+    return ((xf - mu) * inv).astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def layernorm_select(scale, bias, x, levels, *, ladder, eps: float = 1e-5, faults=None):
+    """Per-row ladder variant of :func:`layernorm` (see :func:`rmsnorm_select`)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    inv = _select_inv(var + eps, levels, ladder, faults, x.ndim)
     return ((xf - mu) * inv).astype(dt) * scale.astype(dt) + bias.astype(dt)

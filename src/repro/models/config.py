@@ -74,6 +74,12 @@ class ModelConfig:
     # seeded fault schedule for the sqrt datapath (core/faults.py); frozen/
     # hashable so configs carrying it still key jit caches.  None = clean.
     sqrt_faults: Optional["FaultConfig"] = None
+    # accuracy-SLO demotion ladder (docs/robustness.md §Accuracy SLO): when
+    # set, decode entry points accept a per-row ``unit_levels`` vector and
+    # route each row's norm rsqrt through ladder[level].  Rung 0 must equal
+    # ``sqrt_unit`` (and is the only rung that sees ``sqrt_faults``); the
+    # last rung must be "exact".  None = single-datapath model (default).
+    sqrt_ladder: Optional[Tuple[str, ...]] = None
     remat: str = "block"  # "none" | "block" | "minimal"
     # decode-attention route for the serving hot loop: None = inline XLA
     # path; "fused" = the Pallas decode-attention kernel via the dispatch
@@ -127,4 +133,8 @@ class ModelConfig:
         if self.kind == "encdec":
             assert self.encoder is not None
         assert self.decode_kernel in (None, "fused", "reference")
+        if self.sqrt_ladder is not None:
+            assert len(self.sqrt_ladder) >= 2
+            assert self.sqrt_ladder[0] == self.sqrt_unit
+            assert self.sqrt_ladder[-1] == "exact"
         return self

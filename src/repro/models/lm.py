@@ -35,7 +35,14 @@ from repro.layers import moe as moe_lib
 from repro.layers import rglru as rglru_lib
 from repro.layers import ssd as ssd_lib
 from repro.layers.mlp import mlp_apply, mlp_init
-from repro.layers.norms import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from repro.layers.norms import (
+    layernorm,
+    layernorm_init,
+    layernorm_select,
+    rmsnorm,
+    rmsnorm_init,
+    rmsnorm_select,
+)
 from repro.layers.param import DenseInit
 from repro.models.config import ModelConfig
 
@@ -72,7 +79,18 @@ def _norm_init(ini, name, cfg):
         layernorm_init(ini, name, cfg.d_model)
 
 
-def _norm(p, name, x, cfg):
+def _norm(p, name, x, cfg, levels=None):
+    if levels is not None and cfg.sqrt_ladder is not None:
+        # accuracy-SLO decode: each batch row's rsqrt routes through the
+        # row's current ladder rung (docs/robustness.md §Accuracy SLO)
+        if cfg.norm == "rmsnorm":
+            return rmsnorm_select(
+                p[name], x, levels, ladder=cfg.sqrt_ladder, faults=cfg.sqrt_faults
+            )
+        return layernorm_select(
+            p[f"{name}_scale"], p[f"{name}_bias"], x, levels,
+            ladder=cfg.sqrt_ladder, faults=cfg.sqrt_faults,
+        )
     if cfg.norm == "rmsnorm":
         return rmsnorm(p[name], x, sqrt_unit=cfg.sqrt_unit, faults=cfg.sqrt_faults)
     return layernorm(
@@ -83,9 +101,9 @@ def _norm(p, name, x, cfg):
 def exact_twin(cfg: ModelConfig) -> ModelConfig:
     """The exact-datapath, fault-free twin of a config — the bottom rung of
     the engine's approximate→exact degradation ladder (docs/robustness.md)."""
-    if cfg.sqrt_unit == "exact" and cfg.sqrt_faults is None:
+    if cfg.sqrt_unit == "exact" and cfg.sqrt_faults is None and cfg.sqrt_ladder is None:
         return cfg
-    return cfg.replace(sqrt_unit="exact", sqrt_faults=None)
+    return cfg.replace(sqrt_unit="exact", sqrt_faults=None, sqrt_ladder=None)
 
 
 # ---------------------------------------------------------------------------
@@ -422,22 +440,28 @@ def init_cache(
 # ---------------------------------------------------------------------------
 
 
-def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None):
+def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None, levels=None):
     """One decoder layer step.  With ``layer_idx`` the cache tree is the full
     stacked (L, ...) carry and only this layer's line is touched (in-place
     DUS — the production decode pattern: per-step HBM traffic is one layer
-    read + one token write, not a cache re-materialization)."""
+    read + one token write, not a cache re-materialization).
+
+    ``levels`` (accuracy-SLO serving): per-row ladder rung for every norm
+    rsqrt in the layer, including the qk-norm inside attention_decode."""
     if block in ("global", "window"):
-        h = _norm(p, "ln1", x, cfg)
+        h = _norm(p, "ln1", x, cfg, levels)
         h, cache = attn.attention_decode(
             p["attn"], cfg, h, cache, pos,
             window=cfg.window if block == "window" else None,
             layer_idx=layer_idx,
+            norm_levels=levels,
         )
         x = x + h
         if cross_kv is not None:
-            x = x + attn.cross_attention_decode(p["xattn"], cfg, _norm(p, "lnx", x, cfg), cross_kv)
-        h = _norm(p, "ln2", x, cfg)
+            x = x + attn.cross_attention_decode(
+                p["xattn"], cfg, _norm(p, "lnx", x, cfg, levels), cross_kv
+            )
+        h = _norm(p, "ln2", x, cfg, levels)
         if cfg.moe is not None:
             h, _ = moe_lib.moe_apply(p["moe"], cfg, h, capacity_factor=cfg.moe.capacity_factor)
         else:
@@ -445,19 +469,19 @@ def _layer_decode(p, cfg, block, x, cache, pos, *, cross_kv=None, layer_idx=None
         x = x + h
     elif block == "ssd":
         st = ssd_lib.read_state(cache, layer_idx)
-        h, new_st = ssd_lib.ssd_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg), st)
+        h, new_st = ssd_lib.ssd_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg, levels), st)
         cache = ssd_lib.write_state(cache, new_st, layer_idx)
         x = x + h
     elif block == "rglru":
         st = ssd_lib.read_state(cache, layer_idx)
-        h, new_st = rglru_lib.rglru_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg), st)
+        h, new_st = rglru_lib.rglru_decode(p["mixer"], cfg, _norm(p, "ln1", x, cfg, levels), st)
         cache = ssd_lib.write_state(cache, new_st, layer_idx)
         x = x + h
-        x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg))
+        x = x + mlp_apply(p["mlp"], cfg, _norm(p, "ln2", x, cfg, levels))
     return x, cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None, unit_levels=None):
     """One decode forward (a single token per batch row) over the cache.
 
     tokens: (b, 1) int32; pos: int32 position of this token — a scalar
@@ -469,6 +493,10 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
     Engine's ``mesh=`` mode, ``lm.prefill(mesh=...)``) the activation /
     logits constraints below pin the batch axis to the data axes and the
     vocab axis to 'model'; outside any scope they are no-ops.
+
+    ``unit_levels`` ((b,) int32, requires ``cfg.sqrt_ladder``): accuracy-SLO
+    serving — every norm rsqrt (layer norms, qk-norm, final norm) routes each
+    row through its ladder rung; None keeps the single-datapath trace.
 
     Returns (logits (b, 1, vocab), new_cache).
     """
@@ -494,7 +522,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
                 x, c = carry
                 p, ckv, i = layer
                 x, c = _layer_decode(
-                    p, cfg, blocks[0], x, c, pos, cross_kv=ckv, layer_idx=i
+                    p, cfg, blocks[0], x, c, pos, cross_kv=ckv, layer_idx=i,
+                    levels=unit_levels,
                 )
                 return (x, c), None
 
@@ -506,17 +535,19 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, cross_kv=None):
             def body(carry, layer):
                 x, c = carry
                 p, i = layer
-                x, c = _layer_decode(p, cfg, blocks[0], x, c, pos, layer_idx=i)
+                x, c = _layer_decode(
+                    p, cfg, blocks[0], x, c, pos, layer_idx=i, levels=unit_levels
+                )
                 return (x, c), None
 
             (x, new_cache), _ = jax.lax.scan(body, (x, cache), (params["layers"], idxs))
     else:
         new_cache = []
         for p, b, c in zip(params["layers"], blocks, cache):
-            x, c = _layer_decode(p, cfg, b, x, c, pos, cross_kv=cross_kv)
+            x, c = _layer_decode(p, cfg, b, x, c, pos, cross_kv=cross_kv, levels=unit_levels)
             new_cache.append(c)
 
-    x = _norm(params, "ln_f", x, cfg)
+    x = _norm(params, "ln_f", x, cfg, unit_levels)
     unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
     logits = jnp.einsum("bsd,dv->bsv", x, unembed)
     logits = constrain(logits, ("batch", "seq", "vocab"))
@@ -828,7 +859,9 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
                       remaining, n_steps: int, *, eos_id=None,
                       temperature: float = 0.0, top_k: int = 0, keys=None,
                       cross_kv=None, mesh=None, rules=None,
-                      with_health: bool = False, logits_hook=None):
+                      with_health: bool = False, logits_hook=None,
+                      unit_levels=None, canary_stride: int = 0,
+                      canary_offset=None):
     """Slot-scheduled decode: ``n_steps`` decode_steps under one ``lax.scan``
     where every batch row is an independent request.
 
@@ -866,6 +899,28 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
     (fp32 logits -> fp32 logits) is applied to each step's last-position
     logits before health/sampling — the fault model's activation-injection
     point; detectors see exactly what sampling sees.
+
+    Accuracy-SLO extensions (docs/robustness.md §Accuracy SLO):
+
+    * ``unit_levels`` ((b,) int32, requires ``cfg.sqrt_ladder``) — per-slot
+      datapath ladder rung for every norm rsqrt; rows at level 0 compute
+      bit-identically to the plain path, so an all-zero vector is a no-op.
+    * ``canary_stride=N`` (static; 0 disables) — every step whose *global*
+      index ``canary_offset + i`` is ≡ 0 (mod N), recompute that step's
+      logits through :func:`exact_twin`'s datapath from the same pre-step
+      cache read (the shadow's cache write is discarded — no second cache
+      write survives, no second dispatch happens) and reduce four per-slot
+      stats onto the chunk's single sync: ``canary_checks`` (i32 canaries
+      run while active), ``canary_divergences`` (i32 argmax disagreements),
+      ``canary_max_rel`` (f32 max over canaries of max|served−exact| /
+      max|exact|), ``canary_red_sum`` (f32 sum of per-canary mean relative
+      logit deviation — an online MRED in the spirit of
+      ``core/metrics.py``; divide by checks for the running mean).  The
+      served logits compared are post-``logits_hook`` (what sampling sees);
+      the shadow never applies the hook — it is the trusted reference.
+      ``canary_offset`` is a traced scalar so the cadence continues across
+      chunks without retracing.  The canary lane is read-only: it must not
+      perturb tokens (asserted by the SLO suite).
     """
     if mesh is not None:
         if rules is None:
@@ -878,6 +933,8 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
                 eos_id=eos_id, temperature=temperature, top_k=top_k,
                 keys=keys, cross_kv=cross_kv,
                 with_health=with_health, logits_hook=logits_hook,
+                unit_levels=unit_levels, canary_stride=canary_stride,
+                canary_offset=canary_offset,
             )
     pos = jnp.asarray(pos, jnp.int32)
     active = jnp.asarray(active, bool)
@@ -887,16 +944,64 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
             "temperature sampling needs per-request PRNG keys (a (b,) keys "
             "array); slot-index defaults would break replay reproducibility"
         )
+    canary = bool(canary_stride)
+    if canary:
+        ecfg = exact_twin(cfg)
+        offset = jnp.asarray(0 if canary_offset is None else canary_offset, jnp.int32)
+    if unit_levels is not None:
+        if cfg.sqrt_ladder is None:
+            raise ValueError("unit_levels requires cfg.sqrt_ladder to be set")
+        unit_levels = jnp.asarray(unit_levels, jnp.int32)
 
-    def step(carry, _):
+    def step(carry, i):
+        cache, tok, pos, active, remaining = carry[:5]
+        tail = 5
         if with_health:
-            cache, tok, pos, active, remaining, bad, mx = carry
-        else:
-            cache, tok, pos, active, remaining = carry
-        logits, cache = decode_step(params, cfg, cache, tok, pos, cross_kv=cross_kv)
+            bad, mx = carry[tail], carry[tail + 1]
+            tail += 2
+        if canary:
+            cc, cd, cmr, crs = carry[tail:tail + 4]
+        logits, new_cache = decode_step(
+            params, cfg, cache, tok, pos, cross_kv=cross_kv, unit_levels=unit_levels
+        )
         lg = logits[:, -1].astype(jnp.float32)
         if logits_hook is not None:
             lg = logits_hook(lg)
+        if canary:
+            fire = ((offset + i) % canary_stride) == 0
+
+            def shadow(op):
+                # reads the PRE-step cache (the same read the served step
+                # saw); the shadow's own cache write is dropped on the floor
+                c, t, p, served = op
+                el, _ = decode_step(params, ecfg, c, t, p, cross_kv=cross_kv)
+                el = el[:, -1].astype(jnp.float32)
+                agree = jnp.argmax(served, axis=-1) == jnp.argmax(el, axis=-1)
+                ed = jnp.abs(served - el)
+                ref = jnp.abs(el)
+                rel = (jnp.max(ed, axis=-1)
+                       / jnp.maximum(jnp.max(ref, axis=-1), 1e-20))
+                red = jnp.mean(ed / jnp.maximum(ref, 1e-20), axis=-1)
+                return agree, rel, red
+
+            def no_shadow(op):
+                b_ = op[3].shape[0]
+                return (jnp.ones((b_,), bool), jnp.zeros((b_,), jnp.float32),
+                        jnp.zeros((b_,), jnp.float32))
+
+            # the whole vocab-wide reduction lives INSIDE the cond: a
+            # non-canary step pays only the scalar predicate, not O(vocab)
+            agree, rel, red = jax.lax.cond(
+                fire, shadow, no_shadow, (cache, tok, pos, lg)
+            )
+            upd = fire & active
+            cc = cc + upd.astype(jnp.int32)
+            cd = cd + (upd & ~agree).astype(jnp.int32)
+            # NaN-corrupted served logits make rel NaN; the health latch is
+            # the authoritative signal there, exactly as for ``mx``
+            cmr = jnp.maximum(cmr, jnp.where(upd, rel, 0.0))
+            crs = crs + jnp.where(upd, red, 0.0)
+        cache = new_cache
         if with_health:
             finite = jnp.all(jnp.isfinite(lg), axis=-1)
             bad = bad | (active & ~finite)
@@ -912,32 +1017,25 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
             still = still & (fed != eos_id)
         new_pos = pos + active.astype(jnp.int32)
         new_tok = jnp.where(active[:, None], nxt[:, None], tok)
+        out = [cache, new_tok, new_pos, still, remaining]
         if with_health:
-            return (cache, new_tok, new_pos, still, remaining, bad, mx), (fed, active)
-        return (cache, new_tok, new_pos, still, remaining), (fed, active)
+            out += [bad, mx]
+        if canary:
+            out += [cc, cd, cmr, crs]
+        return tuple(out), (fed, active)
 
+    b = tok.shape[0]
+    carry0 = [cache, tok, pos, active, remaining]
     if with_health:
-        bad0 = jnp.zeros(tok.shape[0], bool)
-        mx0 = jnp.zeros(tok.shape[0], jnp.float32)
-        carry0 = (cache, tok, pos, active, remaining, bad0, mx0)
-        (cache, tok, pos, active, remaining, bad, mx), (toks, emitted) = jax.lax.scan(
-            step, carry0, None, length=n_steps
-        )
-        return (
-            jnp.moveaxis(toks, 0, 1),
-            jnp.moveaxis(emitted, 0, 1),
-            tok,
-            pos,
-            active,
-            remaining,
-            cache,
-            bad,
-            mx,
-        )
-
-    (cache, tok, pos, active, remaining), (toks, emitted) = jax.lax.scan(
-        step, (cache, tok, pos, active, remaining), None, length=n_steps
-    )
+        carry0 += [jnp.zeros(b, bool), jnp.zeros(b, jnp.float32)]
+    if canary:
+        carry0 += [
+            jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32),
+            jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.float32),
+        ]
+    xs = jnp.arange(n_steps, dtype=jnp.int32) if canary else None
+    fin, (toks, emitted) = jax.lax.scan(step, tuple(carry0), xs, length=n_steps)
+    cache, tok, pos, active, remaining = fin[:5]
     return (
         jnp.moveaxis(toks, 0, 1),
         jnp.moveaxis(emitted, 0, 1),
@@ -946,7 +1044,7 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
         active,
         remaining,
         cache,
-    )
+    ) + tuple(fin[5:])
 
 
 def precompute_cross(params, cfg: ModelConfig, audio):

@@ -94,3 +94,56 @@ class TestHWModel:
         # proxies must not exceed paper LUTs by construction-independent slack
         assert t["cwaha4"]["luts_proxy"] < t["cwaha8"]["luts_proxy"]
         assert t["esas"]["luts_proxy"] < t["e2afs"]["luts_proxy"]
+
+
+class TestSampledWideFormats:
+    """The paper's Table-3 protocol is exhaustive fp16; formats too wide to
+    enumerate fall back to the deterministic stratified grid (every normal
+    exponent x linspace mantissas) in metrics.sampled_normal_values."""
+
+    def test_sampled_grid_is_deterministic_and_covers_all_exponents(self):
+        from repro.core import sampled_normal_values
+        from repro.core.numerics import FP32
+
+        g1 = sampled_normal_values(FP32)
+        g2 = sampled_normal_values(FP32)
+        np.testing.assert_array_equal(g1.view(np.uint32), g2.view(np.uint32))
+        assert g1.dtype == np.float32
+        f = g1.astype(np.float64)
+        assert np.isfinite(f).all() and (f > 0).all()
+        # every normal exponent present: 254 binades, endpoints included
+        exps = np.unique(g1.view(np.uint32) >> 23)
+        assert exps.min() == 1 and exps.max() == 254 and exps.size == 254
+        # endpoint mantissas always in the grid (exact powers of two + top
+        # of each binade)
+        mans = np.unique(g1.view(np.uint32) & 0x7FFFFF)
+        assert 0 in mans and (2**23 - 1) in mans
+
+    def test_fp32_sampled_metrics_agree_with_fp16_exhaustive(self):
+        from repro.core.numerics import FP32
+
+        u = get_unit("e2afs")
+        m16 = error_metrics(u.sqrt)  # exhaustive fp16
+        m32 = error_metrics(u.sqrt, FP32)  # sampled
+        # relative metrics are scale-free: the datapath's mean relative
+        # error is a property of the mantissa approximation, so the sampled
+        # fp32 sweep must land near the exhaustive fp16 number
+        assert abs(m32.mred - m16.mred) / m16.mred < 0.10
+        # absolute metrics blow up with the wider dynamic range (expected)
+        assert m32.ed_max > m16.ed_max
+
+    def test_fp32_rsqrt_reference_supported(self):
+        from repro.core.numerics import FP32
+
+        m = error_metrics(get_unit("e2afs").rsqrt, FP32, reference="rsqrt")
+        assert m.mred < 0.006  # same fitted-datapath bound as the fp16 test
+
+    def test_density_knob_monotone_cost(self):
+        from repro.core import sampled_normal_values
+        from repro.core.numerics import FP32
+
+        small = sampled_normal_values(FP32, mans_per_exp=16)
+        big = sampled_normal_values(FP32, mans_per_exp=64)
+        assert small.size < big.size
+        # the sparser grid is a subset-quality estimate, still full-range
+        assert small.min() == big.min() and small.max() == big.max()

@@ -268,3 +268,25 @@ def test_queue_ordering_tie_breaks_by_uid(setup):
                for u in (0, 1, 2))
     for r in reqs:
         np.testing.assert_array_equal(done[r.uid].tokens, _solo(params, cfg, r))
+
+
+def test_run_stats_surface_includes_slo_counters(setup):
+    """run() stats carry the accuracy-SLO surface alongside the
+    backpressure keys — present (and zero/None) even without an SLO, so
+    dashboards can key on them unconditionally."""
+    cfg, params = setup
+    reqs = _requests(cfg, 3)
+    eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3)
+    eng.warmup(prompt_lens={3, 5})
+    done = eng.run(reqs)
+    for key in ("peak_queue_depth", "mean_queue_depth", "shed_rejections",
+                "canary_checks", "canary_divergences", "canary_max_rel_err",
+                "demotions", "promotions", "telemetry"):
+        assert key in eng.stats, key
+    assert eng.stats["canary_checks"] == 0
+    assert eng.stats["demotions"] == 0
+    assert eng.stats["telemetry"] is None
+    # SLO-free completions keep the audit fields at their defaults
+    c = next(iter(done.values()))
+    assert c.unit_final is None and c.canary_checks == 0
+    assert c.unit_trips == ()

@@ -129,7 +129,9 @@ def test_backpressure_stats_surface(setup):
     eng.warmup(prompt_lens={3})
     eng.run(reqs)
     for key in ("peak_queue_depth", "mean_queue_depth", "shed_rejections",
-                "snapshots_written", "journal_replays", "n_rejected"):
+                "snapshots_written", "journal_replays", "n_rejected",
+                "canary_checks", "canary_divergences", "demotions",
+                "promotions", "telemetry"):
         assert key in eng.stats, key
     assert eng.stats["peak_queue_depth"] <= 1
     assert eng.stats["snapshots_written"] == 0  # no autosave configured

@@ -1,0 +1,348 @@
+"""Accuracy-SLO guarded serving (docs/robustness.md §Accuracy SLO):
+shadow-exact canaries, the per-slot datapath ladder, demotion/promotion
+hysteresis, journal + snapshot persistence of slot rungs, and telemetry.
+
+The anchor invariant: with the SLO disabled (``slo=None``) or the canary
+stride at ∞ (``canary_stride=None``) the engine's tokens are BIT-EXACT vs
+today's engine.  Under seeded high-bit ``sqrt_man`` pressure the guarded
+engine must demote, and fresh requests admitted into demoted (exact-rung)
+slots must match the solo exact-datapath run token-for-token.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.configs import get_smoke_config
+from repro.core.faults import FaultConfig
+from repro.launch.engine import AccuracySLO, Engine, Request, solo_generate
+from repro.launch.journal import read_journal, replay_unit_levels
+from repro.launch.telemetry import Telemetry, read_telemetry
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _requests(cfg, n, *, seed=0, prompts=(3, 5), gens=(4, 6)):
+    # all due at t=0: deterministic admission order and chunk contents
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
+                np.int32
+            ),
+            max_new_tokens=int(rng.choice(gens)),
+        )
+        for i in range(n)
+    ]
+
+
+# the seeded pressure every demotion test uses: a pinned high mantissa bit
+# at rate 1.0 makes every rung-0 rsqrt wildly wrong — value-deterministic,
+# so demotion chunks are reproducible
+PRESSURE = FaultConfig("sqrt_man", 1.0, seed=7, bit=21)
+GUARD = AccuracySLO(canary_stride=2, rel_err_budget=0.05,
+                    divergence_budget=0, promote_after=None)
+
+
+class TestAnchorParity:
+    def test_stride_inf_bit_exact_vs_slo_free_engine(self, setup):
+        cfg, params = setup
+        reqs = _requests(cfg, 5)
+        base = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3)
+        base.warmup(prompt_lens={3, 5})
+        done0 = base.run(reqs)
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3,
+                     slo=AccuracySLO(canary_stride=None))
+        eng.warmup(prompt_lens={3, 5})
+        done1 = eng.run(_requests(cfg, 5))
+        for r in reqs:
+            np.testing.assert_array_equal(done1[r.uid].tokens,
+                                          done0[r.uid].tokens)
+        assert eng.stats["canary_checks"] == 0
+        assert eng.stats["demotions"] == 0
+        # audit fields present on the guarded engine's completions
+        c = done1[reqs[0].uid]
+        assert c.unit_final == "e2afs" and c.canary_checks == 0
+
+    def test_canaries_are_read_only(self, setup):
+        """Canaries at a tight stride must not perturb served tokens: the
+        shadow reads the pre-step cache and its write is discarded."""
+        cfg, params = setup
+        reqs = _requests(cfg, 5)
+        base = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3)
+        base.warmup(prompt_lens={3, 5})
+        done0 = base.run(reqs)
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3,
+                     slo=AccuracySLO(canary_stride=2, rel_err_budget=1e9,
+                                     divergence_budget=None,
+                                     promote_after=None))
+        eng.warmup(prompt_lens={3, 5})
+        done1 = eng.run(_requests(cfg, 5))
+        for r in reqs:
+            np.testing.assert_array_equal(done1[r.uid].tokens,
+                                          done0[r.uid].tokens)
+        st = eng.stats
+        assert st["canary_checks"] > 0
+        assert 0.0 < st["canary_max_rel_err"] < 1.0  # natural e2afs drift
+        assert st["demotions"] == 0 and eng.unit_levels == (0, 0)
+        assert sum(c.canary_checks for c in done1.values()) > 0
+
+    def test_slo_validation(self, setup):
+        cfg, params = setup
+        with pytest.raises(ValueError, match="canary_stride"):
+            AccuracySLO(canary_stride=0)
+        with pytest.raises(ValueError, match="rel_err_budget"):
+            AccuracySLO(rel_err_budget=0.0)
+        with pytest.raises(ValueError, match="promote_after"):
+            AccuracySLO(promote_after=0)
+        with pytest.raises(ValueError, match="rung 0"):
+            Engine(params, cfg, num_slots=1, cache_len=24,
+                   slo=AccuracySLO(ladder=("exact", "exact")))
+        with pytest.raises(ValueError, match="exact"):
+            Engine(params, cfg, num_slots=1, cache_len=24,
+                   slo=AccuracySLO(ladder=("e2afs", "esas")))
+
+
+class TestDemotion:
+    def test_seeded_pressure_demotes_and_post_demotion_is_exact(
+        self, setup, tmp_path
+    ):
+        cfg, params = setup
+        jpath = tmp_path / "journal.jsonl"
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3,
+                     faults=PRESSURE, slo=GUARD, journal=jpath)
+        eng.warmup(prompt_lens={3, 5})
+        done = eng.run(_requests(cfg, 4, seed=1))
+        st = eng.stats
+        assert st["demotions"] >= 1
+        assert st["canary_divergences"] >= 1
+        assert eng.unit_levels == (1, 1)
+        assert eng.unit_names == ("exact", "exact")
+        # the demotions are journaled and reconstruct the rung map
+        recs = read_journal(jpath)
+        assert any(r["kind"] == "demoted" for r in recs)
+        assert replay_unit_levels(recs) == {0: 1, 1: 1}
+        # a demoted request's audit trail names its trip
+        tripped = [c for c in done.values()
+                   if any(e["event"] == "demoted" for e in c.unit_trips)]
+        assert tripped and all(c.unit_final == "exact" for c in tripped)
+        # fresh requests admitted into demoted slots: prefill AND decode on
+        # the exact rung, fault-free -> token-exact vs the solo exact run
+        probes = _requests(cfg, 3, seed=2)
+        done_p = eng.run([Request(100 + r.uid, r.prompt, r.max_new_tokens)
+                          for r in probes])
+        ecfg = lm.exact_twin(eng.cfg)
+        for r in probes:
+            c = done_p[100 + r.uid]
+            assert c.unit_final == "exact" and c.unit_trips == ()
+            ref = solo_generate(params, ecfg, r.prompt, r.max_new_tokens,
+                                cache_len=24)
+            np.testing.assert_array_equal(c.tokens, ref)
+
+    def test_clean_run_never_demotes(self, setup):
+        """The same guarded budgets, no fault schedule: the natural e2afs
+        relative error sits far under the 5% budget, so nothing trips (the
+        divergence trigger is off — near-tie argmax flips are legitimate
+        approximate behavior, priced by the bench, not a fault)."""
+        cfg, params = setup
+        slo = AccuracySLO(canary_stride=2, rel_err_budget=0.05,
+                          divergence_budget=None, promote_after=None)
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3, slo=slo)
+        eng.warmup(prompt_lens={3, 5})
+        eng.run(_requests(cfg, 4, seed=1))
+        assert eng.stats["canary_checks"] > 0
+        assert eng.stats["demotions"] == 0
+        assert eng.unit_levels == (0, 0)
+
+    def test_promotion_hysteresis(self, setup, tmp_path):
+        """A vanishing rel-error budget demotes on the FIRST canary (the
+        natural drift exceeds it); at the exact rung every canary is clean
+        (rung-1 rows are bit-identical to the shadow), so after
+        ``promote_after`` clean canaries the slot climbs back."""
+        cfg, params = setup
+        jpath = tmp_path / "journal.jsonl"
+        slo = AccuracySLO(canary_stride=2, rel_err_budget=1e-6,
+                          divergence_budget=None, promote_after=2)
+        eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=3,
+                     slo=slo, journal=jpath)
+        eng.warmup(prompt_lens={3})
+        eng.run([Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                         max_new_tokens=16)])
+        st = eng.stats
+        assert st["demotions"] >= 1 and st["promotions"] >= 1
+        recs = read_journal(jpath)
+        kinds = [r["kind"] for r in recs if r["kind"] in ("demoted", "promoted")]
+        assert "demoted" in kinds and "promoted" in kinds
+        # last trip wins in the replay reconstruction
+        last = replay_unit_levels(recs).get(0)
+        assert last == eng.unit_levels[0]
+
+
+class TestPersistence:
+    def test_snapshot_resume_mid_demotion_matches_uninterrupted(
+        self, setup, tmp_path
+    ):
+        """The satellite contract: kill with one slot demoted to exact and
+        the other still on e2afs, resume, drain — every token matches the
+        uninterrupted SLO-guarded run."""
+        cfg, params = setup
+
+        def build(snapshot=False, tag=""):
+            kw = {}
+            if snapshot:
+                kw = dict(snapshot_dir=tmp_path / f"snap{tag}",
+                          snapshot_every_chunks=1,
+                          journal=tmp_path / f"j{tag}.jsonl")
+            # stride 5 against the LIFETIME step clock: the prime request
+            # spends steps 0..7 (canaries at 0 and 5 demote slot 0), the
+            # killed chunk covers steps 8..9 — no canary, so slot 1 is
+            # still on rung 0 at the cut
+            e = Engine(params, cfg, num_slots=2, cache_len=24, chunk=2,
+                       faults=PRESSURE,
+                       slo=AccuracySLO(canary_stride=5, rel_err_budget=0.05,
+                                       divergence_budget=None,
+                                       promote_after=None),
+                       **kw)
+            e.warmup(prompt_lens={3})
+            return e
+
+        # prime IDENTICALLY: one solo request demotes slot 0; slot 1 is
+        # never occupied, never canaried, and stays on rung 0
+        prime = [Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                         max_new_tokens=8)]
+        trace = [
+            Request(uid=1, prompt=np.arange(3, dtype=np.int32) + 1,
+                    max_new_tokens=7),
+            Request(uid=2, prompt=np.arange(3, dtype=np.int32) + 2,
+                    max_new_tokens=7),
+        ]
+
+        ref_eng = build()
+        ref_eng.run(list(prime))
+        assert ref_eng.unit_levels == (1, 0)
+        done_ref = ref_eng.run(list(trace))
+
+        eng = build(snapshot=True, tag="a")
+        eng.run(list(prime))
+        assert eng.unit_levels == (1, 0)
+        eng.run(list(trace), max_chunks=1)
+        assert eng.stats["killed"]
+        # genuinely mid-demotion at the cut: slot 0 exact, slot 1 e2afs
+        assert eng.unit_levels == (1, 0)
+        del eng
+
+        # the SLO rides the snapshot meta; the fault schedule is a chaos
+        # knob the caller re-passes (like every non-frozen engine kwarg)
+        eng2 = Engine.resume(params, cfg, tmp_path / "snapa",
+                             journal=tmp_path / "ja.jsonl", faults=PRESSURE)
+        assert eng2.unit_levels == (1, 0)  # rungs restored mid-demotion
+        assert eng2.slo is not None and eng2.slo.canary_stride == 5
+        done2 = eng2.run([])
+        for uid in (1, 2):
+            np.testing.assert_array_equal(done2[uid].tokens,
+                                          done_ref[uid].tokens)
+        # the interrupted degradation completed after resume exactly as in
+        # the uninterrupted run: slot 1's canary tripped post-restore
+        assert eng2.unit_levels == ref_eng.unit_levels == (1, 1)
+
+    def test_journal_only_resume_reconstructs_rungs(self, setup, tmp_path):
+        """No snapshot committed: the demoted/promoted journal trail alone
+        restores the ladder state (best-effort degraded beats optimistically
+        approximate)."""
+        cfg, params = setup
+        jpath = tmp_path / "j.jsonl"
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3,
+                     faults=PRESSURE, slo=GUARD, journal=jpath)
+        eng.warmup(prompt_lens={3, 5})
+        eng.run(_requests(cfg, 4, seed=1))
+        assert eng.unit_levels == (1, 1)
+        del eng
+        eng2 = Engine.resume(params, cfg, None, journal=jpath,
+                             num_slots=2, cache_len=24, chunk=3,
+                             faults=PRESSURE, slo=GUARD)
+        assert eng2.unit_levels == (1, 1)
+
+    def test_journal_unknown_kind_tolerated(self, setup, tmp_path):
+        """Forward compat: a reader must skip record kinds it does not
+        understand instead of failing the resume."""
+        cfg, params = setup
+        jpath = tmp_path / "j.jsonl"
+        eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=3,
+                     journal=jpath)
+        eng.warmup(prompt_lens={3})
+        eng.run([Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                         max_new_tokens=4)])
+        del eng
+        with open(jpath, "a", encoding="utf-8") as f:
+            f.write('{"kind": "from_the_future", "t": 0.0, "payload": 1}\n')
+        recs = read_journal(jpath)
+        assert any(r["kind"] == "from_the_future" for r in recs)
+        assert replay_unit_levels(recs) == {}  # unknown kinds are skipped
+        eng2 = Engine.resume(params, cfg, None, journal=jpath,
+                             num_slots=1, cache_len=24, chunk=3)
+        done = eng2.run([Request(uid=5, prompt=np.arange(3, dtype=np.int32),
+                                 max_new_tokens=2)])
+        assert done[5].status == "ok"  # uid 0 already finished, not re-served
+        assert 0 not in done
+
+
+class TestTelemetry:
+    def test_engine_emits_chunk_records(self, setup, tmp_path):
+        cfg, params = setup
+        tpath = tmp_path / "telem.jsonl"
+        eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3,
+                     slo=AccuracySLO(canary_stride=2, rel_err_budget=1e9,
+                                     divergence_budget=None,
+                                     promote_after=None),
+                     telemetry=tpath)
+        eng.warmup(prompt_lens={3, 5})
+        eng.run(_requests(cfg, 4))
+        assert eng.stats["telemetry"] == str(tpath)
+        recs = read_telemetry(tpath)
+        assert len(recs) == eng.stats["decode_chunks"]
+        for r in recs:
+            for key in ("kind", "t", "chunk", "active_slots", "slot_occupancy",
+                        "queue_depth", "tokens", "tok_s", "canary_checks",
+                        "canary_divergences", "canary_max_rel", "unit_levels"):
+                assert key in r, key
+            assert r["kind"] == "chunk"
+            assert 0.0 <= r["slot_occupancy"] <= 1.0
+        assert sum(r["tokens"] for r in recs) == eng.stats["total_tokens"]
+        assert sum(r["canary_checks"] for r in recs) == eng.stats["canary_checks"]
+        # the rung histogram always sums to the pool size
+        assert all(sum(r["unit_levels"].values()) == 2 for r in recs)
+
+    def test_telemetry_emitted_without_slo_too(self, setup, tmp_path):
+        cfg, params = setup
+        tpath = tmp_path / "telem.jsonl"
+        eng = Engine(params, cfg, num_slots=1, cache_len=24, chunk=3,
+                     telemetry=Telemetry(tpath))
+        eng.warmup(prompt_lens={3})
+        eng.run([Request(uid=0, prompt=np.arange(3, dtype=np.int32),
+                         max_new_tokens=4)])
+        recs = read_telemetry(tpath)
+        assert recs and all(r["canary_checks"] == 0 for r in recs)
+        assert recs[0]["unit_levels"] == {"e2afs": 1}
+
+    def test_torn_tail_tolerated(self, tmp_path):
+        tpath = tmp_path / "telem.jsonl"
+        t = Telemetry(tpath)
+        t.emit({"kind": "chunk", "chunk": 1})
+        t.emit({"kind": "chunk", "chunk": 2})
+        t.close()
+        with open(tpath, "a", encoding="utf-8") as f:
+            f.write('{"kind": "chunk", "chu')  # killed mid-append
+        recs = read_telemetry(tpath)
+        assert [r["chunk"] for r in recs] == [1, 2]
+        # corruption mid-file is disk damage, not a crash artifact
+        bad = tmp_path / "bad.jsonl"
+        bad.write_text('{"kind": "chunk"}\nnot json\n{"kind": "chunk"}\n')
+        with pytest.raises(ValueError, match="corrupt"):
+            read_telemetry(bad)
