@@ -23,6 +23,7 @@ SUITES = (
     "engine_bench_faults",  # detector overhead + fault recovery (warn gate input)
     "engine_bench_overload",  # bounded-queue admission control (warn gate input)
     "engine_bench_slo",  # accuracy-SLO canaries + datapath ladder (warn gate input)
+    "engine_bench_spec",  # draft-and-verify speculative decode (warn gate input)
     "roofline",         # EXPERIMENTS.md §Roofline (reads dry-run artifacts)
 )
 
@@ -33,6 +34,7 @@ ALIASES = {
     "engine_bench_faults": ("engine_bench", {"faults_lane": True}),
     "engine_bench_overload": ("engine_bench", {"overload_lane": True}),
     "engine_bench_slo": ("engine_bench", {"slo_lane": True}),
+    "engine_bench_spec": ("engine_bench", {"spec_lane": True}),
 }
 
 

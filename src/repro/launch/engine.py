@@ -61,6 +61,21 @@ the due-request queue and a ``shed_policy`` (``reject-new`` /
 ``evict-latest-deadline`` / ``shed-by-slo``) picks what to drop (status
 ``rejected``) when traffic exceeds capacity.
 
+Speculative decoding (docs/serving.md §Speculative decoding): ``spec=
+SpecConfig(k=...)`` turns each decode chunk into ``chunk`` draft-and-verify
+steps over the same slot pool — per step every active slot drafts ``k``
+candidate tokens (self-drafting n-gram lookup over its own fed-token
+history, or a small draft model via ``draft_model=``), ONE batched verify
+forward scores all ``k+1`` positions through the target datapath, the
+longest agreeing prefix commits and rejected rows roll the per-slot cache
+write index back bit-for-bit.  Greedy speculative output is bit-identical
+to non-speculative greedy by construction (attention-only decoder stacks,
+dense/ring/int8 caches — tests/models/test_spec_decode.py), so speculation
+composes with everything above: health detectors latch over committed rows
+only, SLO canaries fire on row 0 (always an accepted position) and a
+demoted slot decodes non-speculatively until promoted back, and snapshots
+resume n-gram speculation by rebuilding the history from slot metadata.
+
 Accuracy SLO (docs/robustness.md §Accuracy SLO): ``slo=AccuracySLO(...)``
 makes the *silently* approximate datapath self-guarding — the detectors
 above only fire on loud failures (non-finite, magnitude blow-up), but an
@@ -122,6 +137,7 @@ __all__ = [
     "Completion",
     "Engine",
     "AccuracySLO",
+    "SpecConfig",
     "run_static_baseline",
     "solo_generate",
     "STATUSES",
@@ -208,6 +224,40 @@ class AccuracySLO:
             )
 
 
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding config for :class:`Engine` (``spec=``).
+
+    * ``k`` — drafts proposed per step; each speculative step commits
+      1..k+1 tokens (the verified prefix plus the verify forward's own next
+      token).  For sliding-window stacks ``k + 1`` must fit the window.
+    * ``draft`` — draft source: ``"ngram"`` (default) self-drafts from the
+      slot's own fed-token history (no extra model, no extra forward);
+      ``"model"`` greedily continues a small draft model passed to the
+      engine as ``draft_model=(draft_params, draft_cfg)``, which then keeps
+      its own slot-pool KV cache in lock step with the committed stream.
+
+    Correctness never depends on the drafts: greedy speculative output is
+    bit-identical to non-speculative greedy by construction (row 0 of every
+    verify block is the committed token), so ``draft`` only moves the
+    acceptance rate.  Speculation auto-disables per slot while an accuracy
+    SLO holds the slot on a demoted rung, and quarantined requests re-enter
+    through the normal admission path (docs/serving.md §Speculative
+    decoding).
+    """
+
+    k: int = 3
+    draft: str = "ngram"
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec.k must be >= 1 draft tokens, got {self.k}")
+        if self.draft not in ("ngram", "model"):
+            raise ValueError(
+                f"spec.draft must be 'ngram' or 'model', got {self.draft!r}"
+            )
+
+
 def solo_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int, *,
                   cache_len: int, quantized_kv: bool = False) -> np.ndarray:
     """The parity reference: one request alone through the PR-3 fast path
@@ -259,6 +309,11 @@ class Completion:
     disagreements) run against it, and ``unit_trips`` records every
     demotion/promotion event that fired while it held the slot.  All stay
     at their defaults without an SLO (or for never-admitted requests).
+
+    With speculative decoding (``spec=``), ``spec_steps`` counts the
+    draft-and-verify steps the request's slot ran while it held it and
+    ``spec_accepted`` the drafts those steps accepted;
+    :attr:`accepted_per_step` is their ratio.
     """
 
     uid: int
@@ -273,11 +328,19 @@ class Completion:
     canary_checks: int = 0
     canary_divergences: int = 0
     unit_trips: tuple = ()
+    spec_steps: int = 0
+    spec_accepted: int = 0
 
     @property
     def latency_s(self) -> float:
         """End-to-end request latency: arrival to final token, seconds."""
         return self.finished_s - self.arrival_s
+
+    @property
+    def accepted_per_step(self) -> float:
+        """Mean drafts accepted per speculative step for this request (0..k;
+        0.0 without speculation or for never-admitted requests)."""
+        return (self.spec_accepted / self.spec_steps) if self.spec_steps else 0.0
 
 
 @dataclasses.dataclass
@@ -355,7 +418,9 @@ class Engine:
                  snapshot_every_chunks: Optional[int] = None,
                  journal=None,
                  slo: Optional[AccuracySLO] = None,
-                 telemetry=None):
+                 telemetry=None,
+                 spec: Optional[SpecConfig] = None,
+                 draft_model: Optional[tuple] = None):
         if num_slots < 1 or cache_len < 2 or chunk < 1:
             raise ValueError(
                 f"need num_slots >= 1, cache_len >= 2, chunk >= 1 "
@@ -378,6 +443,50 @@ class Engine:
                     "snapshot_every_chunks needs snapshot_dir= (nowhere to "
                     "commit the autosaves)"
                 )
+        if spec is not None:
+            if not isinstance(spec, SpecConfig):
+                raise TypeError(f"spec must be a SpecConfig (got {type(spec)!r})")
+            if temperature != 0.0 or top_k != 0:
+                raise ValueError(
+                    "speculative decoding is greedy-only (the acceptance rule "
+                    "compares argmaxes); drop temperature/top_k or spec="
+                )
+            if mesh is not None:
+                raise ValueError(
+                    "speculative decoding does not run on a mesh yet; drop "
+                    "mesh= or spec="
+                )
+            lm._validate_spec_cfg(cfg)
+            if "window" in cfg.blocks and spec.k + 1 > cfg.window:
+                raise ValueError(
+                    f"spec.k+1={spec.k + 1} exceeds the sliding window "
+                    f"({cfg.window}); pick k <= window - 1"
+                )
+            if spec.draft == "model":
+                if draft_model is None:
+                    raise ValueError(
+                        "spec.draft='model' needs draft_model=(draft_params, "
+                        "draft_cfg)"
+                    )
+                dparams, dcfg = draft_model
+                lm._validate_spec_cfg(dcfg, what="draft model")
+                if dcfg.vocab != cfg.vocab:
+                    raise ValueError(
+                        f"draft vocab {dcfg.vocab} != target vocab {cfg.vocab}"
+                    )
+                if snapshot_dir is not None or snapshot_every_chunks is not None:
+                    raise ValueError(
+                        "snapshots cover n-gram speculation only: the n-gram "
+                        "history rebuilds from slot metadata at resume, but a "
+                        "draft-model KV cache does not serialize in snapshot "
+                        "format 1 — use spec.draft='ngram' with snapshot_dir="
+                    )
+        elif draft_model is not None:
+            raise ValueError("draft_model= without spec= has no effect; pass "
+                             "spec=SpecConfig(draft='model')")
+        self.spec = spec
+        self._draft_model = draft_model if (
+            spec is not None and spec.draft == "model") else None
         self.params = params
         # sqrt-site fault schedules ride the serving config itself (hashable,
         # so the jitted steps key their caches correctly); activation faults
@@ -472,6 +581,11 @@ class Engine:
                        sh["keys"])
             rep = sh["replicated"]
 
+        spec_on = spec is not None
+        draft_on = self._draft_model is not None
+        if draft_on:
+            dparams, dcfg = self._draft_model
+
         def make_admit(acfg):
             """Build the jitted admission step for one datapath config.
             Without an SLO there is exactly one (the serving config); with a
@@ -479,16 +593,22 @@ class Engine:
             slot must PREFILL on that slot's rung too, because the KV cache
             is datapath-dependent (qk-norm routes cached keys through the
             sqrt unit), so mixing an approximate prefill with exact decode
-            would break the post-demotion exactness guarantee."""
+            would break the post-demotion exactness guarantee.  With
+            speculation the step also lands the prompt in the slot's
+            fed-token history row (the n-gram draft source) and, when
+            drafting with a model, prefills the draft model's own cache —
+            still one dispatch per admission."""
 
-            def admit_fn(p, cache, tok, pos, active, remaining, keys, prompt,
-                         slots, budgets, uids):
-                """One fused admission step: ragged prefill into the live
-                cache plus all per-slot pool-state updates (first token
-                sampled in-device with the same per-request stream the
-                decode chunks use, position = prompt length, budget, a
-                uid-keyed PRNG stream) — a single dispatch per admission
-                instead of a pile of eager ops."""
+            def admit_fn(p, cache, tok, pos, active, remaining, keys,
+                         *rest):
+                i = 0
+                if spec_on:
+                    hist = rest[i]
+                    i += 1
+                if draft_on:
+                    dcache = rest[i]
+                    i += 1
+                prompt, slots, budgets, uids = rest[i:]
                 with rules_ctx():
                     logits, cache = lm.prefill_into_slots(
                         p, acfg, cache, prompt, slots
@@ -511,13 +631,28 @@ class Engine:
                     active = active.at[slots].set(True)
                     remaining = remaining.at[slots].set(budgets)
                     keys = keys.at[slots].set(new_keys)
-                    return cache, tok, pos, active, remaining, keys
+                    out = (cache, tok, pos, active, remaining, keys)
+                    if spec_on:
+                        # hist[p] = token fed at step p; stale entries from
+                        # the slot's previous occupant past the new prompt
+                        # stay masked (readers check idx < pos) until the
+                        # decode scan overwrites them in commit order
+                        s_w = min(prompt.shape[1], hist.shape[1])
+                        hist = hist.at[slots, :s_w].set(prompt[:, :s_w])
+                        out = out + (hist,)
+                    if draft_on:
+                        _, dcache = lm.prefill_into_slots(
+                            dparams, dcfg, dcache, prompt, slots
+                        )
+                        out = out + (dcache,)
+                    return out
 
+            donate = tuple(range(1, 7 + spec_on + draft_on))
             if mesh is None:
-                return jax.jit(admit_fn, donate_argnums=(1, 2, 3, 4, 5, 6))
+                return jax.jit(admit_fn, donate_argnums=donate)
             return jax.jit(
                 admit_fn,
-                donate_argnums=(1, 2, 3, 4, 5, 6),
+                donate_argnums=donate,
                 in_shardings=(self._param_sh, *pool_in, rep, rep, rep, rep),
                 out_shardings=pool_in,
             )
@@ -531,6 +666,37 @@ class Engine:
         with_health = self.detectors
         slo_on = slo is not None
         canary_stride = self._canary_stride
+
+        if spec_on:
+            spec_k = spec.k
+
+            def decode_fn(p, c, tok, pos, act, rem, hist, *rest):
+                i = 0
+                kw = {}
+                if draft_on:
+                    kw = dict(draft_params=dparams, draft_cfg=dcfg,
+                              draft_cache=rest[i])
+                    i += 1
+                if slo_on:
+                    levels, offset = rest[i:]
+                    # a demoted slot's rung is the accuracy-critical state:
+                    # it decodes non-speculatively (acceptance clamped to 0,
+                    # row 0 of the block IS its sequential step) until the
+                    # SLO promotes it back
+                    kw.update(unit_levels=levels, spec_disable=levels > 0,
+                              canary_stride=canary_stride,
+                              canary_offset=offset)
+                return lm.decode_slots_spec_scan(
+                    p, cfg, c, tok, pos, act, rem, hist, chunk, k=spec_k,
+                    eos_id=eos_id, with_health=with_health,
+                    logits_hook=hook, **kw,
+                )
+
+            self._decode_j = jax.jit(
+                decode_fn, donate_argnums=tuple(range(1, 7 + draft_on))
+            )
+            self.reset()
+            return
 
         def decode_fn(p, c, tok, pos, act, rem, keys, *slo_args):
             with rules_ctx():
@@ -607,6 +773,20 @@ class Engine:
         self._slot_canary_checks = np.zeros(b, np.int64)
         self._slot_canary_div = np.zeros(b, np.int64)
         self._slot_events: list[list] = [[] for _ in range(b)]
+        # speculative-decoding state: the per-slot fed-token history rows
+        # (the n-gram draft source — device-resident, donated through the
+        # admit/decode jits alongside the pool), the draft model's own slot
+        # cache when model-drafting, and host-side acceptance counters (per
+        # current occupant, reset at _admit; and engine-lifetime totals)
+        if self.spec is not None:
+            self._hist = jnp.zeros((b, self.cache_len), jnp.int32)
+            if self._draft_model is not None:
+                dcfg = self._draft_model[1]
+                self._dcache, _ = lm.init_cache(dcfg, b, self.cache_len)
+            self._slot_spec_steps = np.zeros(b, np.int64)
+            self._slot_spec_acc = np.zeros(b, np.int64)
+            self._spec_steps_total = 0
+            self._spec_acc_total = 0
         if self._injector is not None:
             self._injector.reset()
 
@@ -683,6 +863,11 @@ class Engine:
         if ckpt_dir is None:
             raise ValueError("snapshot needs a directory: pass ckpt_dir= or "
                              "construct the Engine with snapshot_dir=")
+        if self._draft_model is not None:
+            raise ValueError(
+                "snapshot covers n-gram speculation only (the draft-model KV "
+                "cache does not serialize in snapshot format 1)"
+            )
         step = self._chunks_total if step is None else int(step)
         slots_meta = []
         for slot in range(self.num_slots):
@@ -708,6 +893,9 @@ class Engine:
                 "shed_policy": self.shed_policy,
                 "slo": (None if self.slo is None
                         else dataclasses.asdict(self.slo)),
+                # additive key: readers without speculation ignore it
+                "spec": (None if self.spec is None
+                         else dataclasses.asdict(self.spec)),
             },
             "chunks_total": int(self._chunks_total),
             "slots": slots_meta,
@@ -816,6 +1004,9 @@ class Engine:
                 if s.get("ladder") is not None:
                     s["ladder"] = tuple(s["ladder"])
                 kw["slo"] = AccuracySLO(**s)
+            sp = e.get("spec")
+            if sp is not None:
+                kw["spec"] = SpecConfig(**sp)
             for frozen in ("num_slots", "cache_len", "quantized_kv"):
                 if frozen in overrides and overrides[frozen] != kw[frozen]:
                     raise ValueError(
@@ -863,6 +1054,22 @@ class Engine:
         self._queue = deque(_ticket_from_record(r) for r in meta["queue"])
         self._chunks_total = int(meta["chunks_total"])
         self._restored_step = int(step)
+        if self.spec is not None:
+            # the n-gram history is NOT part of the serialized pool (the
+            # snapshot format predates speculation); rebuild it from the
+            # slot metadata — hist[p] is the token fed at step p, which is
+            # the prompt followed by the emitted (= fed) tokens.  A resumed
+            # slot drafts from exactly the history an uninterrupted run
+            # would hold, and drafts never affect correctness anyway.
+            hist = np.zeros((self.num_slots, self.cache_len), np.int32)
+            for slot, rec in enumerate(meta["slots"]):
+                if rec is None:
+                    continue
+                fed = list(rec["prompt"]) + [int(x) for x in
+                                             rec.get("emitted", [])]
+                fed = fed[: self.cache_len]
+                hist[slot, : len(fed)] = fed
+            self._hist = jnp.asarray(hist)
         s = meta.get("slo")
         if s is not None and self._ladder is not None:
             top = len(self._ladder) - 1
@@ -1030,16 +1237,28 @@ class Engine:
         self._validate(req)
         level = 0 if self._ladder is None else int(self._unit_levels[slot])
         prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        (self._cache, self._tok, self._pos, self._active, self._remaining,
-         self._keys) = self._dispatch(
+        extra_in: tuple = ()
+        if self.spec is not None:
+            extra_in = (self._hist,)
+            if self._draft_model is not None:
+                extra_in = extra_in + (self._dcache,)
+        out = self._dispatch(
             self._admit_jit_for(level),
             self.params, self._cache, self._tok, self._pos, self._active,
-            self._remaining, self._keys, prompt,
+            self._remaining, self._keys, *extra_in, prompt,
             np.asarray([slot], np.int32),
             np.asarray([req.max_new_tokens], np.int32),
             # sampling stream keyed by uid, not by slot
             np.asarray([req.uid & 0x7FFFFFFF], np.int32),
         )
+        (self._cache, self._tok, self._pos, self._active, self._remaining,
+         self._keys) = out[:6]
+        if self.spec is not None:
+            self._hist = out[6]
+            if self._draft_model is not None:
+                self._dcache = out[7]
+            self._slot_spec_steps[slot] = 0
+            self._slot_spec_acc[slot] = 0
         self._owner[slot] = req
         self._emitted[slot] = []
         self._admitted_s[slot] = now
@@ -1051,6 +1270,8 @@ class Engine:
         self._slot_events[slot] = []
 
     def _decode_chunk(self):
+        if self.spec is not None:
+            return self._decode_chunk_spec()
         args = (self.params, self._cache, self._tok, self._pos, self._active,
                 self._remaining, self._keys)
         if self.slo is not None:
@@ -1082,6 +1303,49 @@ class Engine:
         # smoke-scale serve loop)
         return jax.device_get((toks, emitted, self._active, bad, mx,
                                cc, cd, cmr, crs))
+
+    def _decode_chunk_spec(self):
+        """The speculative twin of :meth:`_decode_chunk`: one jitted
+        ``lm.decode_slots_spec_scan`` of ``chunk`` draft-and-verify steps
+        (each committing 1..k+1 tokens per active slot), returning the same
+        9-tuple so the serve loop is speculation-agnostic — ``toks`` /
+        ``emitted`` are just wider, ``chunk * (k+1)``.  The per-slot
+        acceptance gauges ride the chunk's single host sync and accumulate
+        into the occupant counters here."""
+        args = [self.params, self._cache, self._tok, self._pos, self._active,
+                self._remaining, self._hist]
+        if self._draft_model is not None:
+            args.append(self._dcache)
+        if self.slo is not None:
+            args += [np.asarray(self._unit_levels, np.int32),
+                     np.int32(self._chunks_total * self.chunk)]
+        out = self._dispatch(self._decode_j, *args)
+        (toks, emitted, self._tok, self._pos, self._active,
+         self._remaining, self._cache, self._hist) = out[:8]
+        accepted, steps = out[8], out[9]
+        i = 10
+        if self._draft_model is not None:
+            self._dcache = out[i]
+            i += 1
+        if self.detectors:
+            bad, mx = out[i], out[i + 1]
+            i += 2
+        else:
+            bad = jnp.zeros((self.num_slots,), bool)
+            mx = jnp.zeros((self.num_slots,), jnp.float32)
+        if self.slo is not None and self._canary_stride:
+            cc, cd, cmr, crs = out[i:i + 4]
+        else:
+            cc = cd = np.zeros((self.num_slots,), np.int32)
+            cmr = crs = np.zeros((self.num_slots,), np.float32)
+        got = jax.device_get((toks, emitted, self._active, bad, mx,
+                              cc, cd, cmr, crs, accepted, steps))
+        acc_h, steps_h = got[9], got[10]
+        self._slot_spec_acc += acc_h
+        self._slot_spec_steps += steps_h
+        self._spec_acc_total += int(acc_h.sum())
+        self._spec_steps_total += int(steps_h.sum())
+        return got[:9]
 
     def _slo_update(self, cc, cd, cmr, counters) -> None:
         """Apply one chunk's canary gauges to the per-slot ladder: demote a
@@ -1263,6 +1527,9 @@ class Engine:
         }
         t0 = time.perf_counter()
         decode_chunks = 0
+        if self.spec is not None:
+            spec_acc0 = self._spec_acc_total
+            spec_steps0 = self._spec_steps_total
         peak_queue_depth = len(queue)
         queue_depth_sum = 0
         queue_depth_samples = 0
@@ -1278,6 +1545,11 @@ class Engine:
                     canary_checks=int(self._slot_canary_checks[slot]),
                     canary_divergences=int(self._slot_canary_div[slot]),
                     unit_trips=tuple(self._slot_events[slot]),
+                )
+            if slot is not None and self.spec is not None:
+                audit.update(
+                    spec_steps=int(self._slot_spec_steps[slot]),
+                    spec_accepted=int(self._slot_spec_acc[slot]),
                 )
             done[req.uid] = Completion(
                 uid=req.uid,
@@ -1469,6 +1741,17 @@ class Engine:
             **counters,
             **{f"n_{s}": by_status[s] for s in STATUSES},
         }
+        if self.spec is not None:
+            acc = self._spec_acc_total - spec_acc0
+            steps = self._spec_steps_total - spec_steps0
+            self.stats.update(
+                spec_steps=steps,
+                spec_accepted=acc,
+                # drafts accepted per speculative step (0..k) and the same
+                # as a fraction of drafts proposed (0..1)
+                accepted_per_step=acc / max(steps, 1),
+                acceptance_rate=acc / max(steps * self.spec.k, 1),
+            )
         return done
 
 

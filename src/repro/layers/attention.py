@@ -25,6 +25,8 @@ __all__ = [
     "attention_train",
     "attention_prefill",
     "attention_decode",
+    "attention_verify",
+    "verify_cache_commit",
     "init_kv_cache",
     "kv_cache_specs",
     "prefill_cache_write",
@@ -538,6 +540,163 @@ def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None,
     )
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: multi-token verify reads + rollback-safe commits
+# ---------------------------------------------------------------------------
+
+
+def attention_verify(p, cfg, x, cache, pos, *, window: Optional[int] = None,
+                     layer_idx=None, norm_levels=None):
+    """Draft-verify attention: score ``sq`` candidate rows per slot against
+    the cache in ONE forward, WITHOUT committing any cache write.
+
+    x: (b, sq, d) — row ``j`` is the token the slot would feed at position
+    ``pos[b] + j`` (row 0 the committed next token, rows 1.. the drafts);
+    pos: (b,) per-slot position of row 0.  Returns ``(out, entries)``:
+    ``out`` (b, sq, d) the attention output per row, ``entries`` the per-row
+    cache lines (quantized for int8 caches, exactly what the sequential step
+    write would have landed) for :func:`verify_cache_commit` to commit once
+    the accepted prefix is known.  The cache operand is left untouched —
+    rollback is "never wrote", not "un-write".
+
+    Bit-exactness contract (the headline spec-decode guarantee): row ``j``'s
+    output equals the sequential :func:`attention_decode` step at position
+    ``pos + j`` after feeding rows ``0..j-1``, bit-for-bit.  Each row scores
+    against a per-row effective K/V — the old cache with rows ``j' <= j``
+    substituted at their ring slots ``(pos + j') % cache_len`` — built by
+    an exact one-hot gather, so the score vector has the same slot order,
+    the same fp32 values and the same softmax summation order the
+    sequential step sees.  Requires ``sq <= cache_len`` (distinct slots
+    within the block; for sliding-window layers that means k+1 <= window).
+    """
+    b, sq, d = x.shape
+    t_axis = 1 if layer_idx is None else 2
+    cache_len = cache["k"].shape[t_axis]
+    if sq > cache_len:
+        raise ValueError(
+            f"verify block of {sq} rows exceeds cache_len {cache_len}; "
+            "speculation needs k+1 <= window for sliding-window layers"
+        )
+    quantized = cache["k"].dtype == jnp.int8
+    pos = jnp.asarray(pos, jnp.int32)
+    offs = jnp.arange(sq, dtype=jnp.int32)
+    posr = pos[:, None] + offs[None, :]  # (b, sq) absolute row positions
+    use_rope = cfg.pos == "rope"
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x, x, posr, posr, use_rope=use_rope, norm_levels=norm_levels
+    )
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k_new = constrain(k_new, ("batch", "seq", "kv_heads", None))
+    v_new = constrain(v_new, ("batch", "seq", "kv_heads", None))
+
+    # slot occupancy of the in-flight rows: match[b, j, t] == row j's ring
+    # slot is t; written[b, j, t] == some row j' <= j lands at slot t (rows
+    # are distinct mod cache_len since sq <= cache_len)
+    t_idx = jnp.arange(cache_len)
+    slots = posr % cache_len
+    match = slots[:, :, None] == t_idx[None, None, :]  # (b, sq, t)
+    written = jnp.cumsum(match.astype(jnp.int32), axis=1) > 0
+
+    if quantized:
+        # quantize through the sequential write's path: the scale reduce is
+        # per line, so values and scales are bit-identical to stepping
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        entries = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        k_lines, v_lines = kq.astype(x.dtype), vq.astype(x.dtype)
+        k_old = _cache_read(cache["k"], layer_idx).astype(x.dtype)
+        v_old = _cache_read(cache["v"], layer_idx).astype(x.dtype)
+        onehot_s = match.astype(jnp.float32)
+        ks_at = jnp.einsum("bjt,bjn->btn", onehot_s, ks)  # (b, t, kv)
+        vs_at = jnp.einsum("bjt,bjn->btn", onehot_s, vs)
+        sel_s = written[..., None]  # (b, sq, t, 1)
+        ks_old = _cache_read(cache["k_scale"], layer_idx)
+        vs_old = _cache_read(cache["v_scale"], layer_idx)
+        k_scale_eff = jnp.where(sel_s, ks_at[:, None], ks_old[:, None])
+        v_scale_eff = jnp.where(sel_s, vs_at[:, None], vs_old[:, None])
+    else:
+        entries = {"k": k_new, "v": v_new}
+        k_lines, v_lines = k_new, v_new
+        k_old = _cache_read(cache["k"], layer_idx)
+        v_old = _cache_read(cache["v"], layer_idx)
+        k_scale_eff = v_scale_eff = None
+
+    # per-row effective K/V: the one-hot matmul copies each in-flight line to
+    # its slot exactly (one 1.0 coefficient, rest exact zeros), then rows
+    # select in-flight vs old per slot — slot ORDER (softmax summation order)
+    # is identical to the sequential step's cache layout
+    onehot = match.astype(x.dtype)
+    k_at = jnp.einsum("bjt,bjnh->btnh", onehot, k_lines)  # (b, t, kv, hd)
+    v_at = jnp.einsum("bjt,bjnh->btnh", onehot, v_lines)
+    sel = written[..., None, None]  # (b, sq, t, 1, 1)
+    k_eff = jnp.where(sel, k_at[:, None], k_old[:, None])  # (b, sq, t, kv, hd)
+    v_eff = jnp.where(sel, v_at[:, None], v_old[:, None])
+
+    h = q.shape[2]
+    g = h // k_eff.shape[3]
+    k_exp = k_eff if g == 1 else jnp.repeat(k_eff, g, axis=3)
+    v_exp = v_eff if g == 1 else jnp.repeat(v_eff, g, axis=3)
+    scale = cfg.d_head**-0.5
+    scores = jnp.einsum("bjhk,bjthk->bhjt", q, k_exp).astype(jnp.float32) * scale
+    if k_scale_eff is not None:
+        ks_h = jnp.moveaxis(k_scale_eff, 3, 1)  # (b, kv, sq, t)
+        ks_h = ks_h if g == 1 else jnp.repeat(ks_h, g, axis=1)
+        scores = scores * ks_h
+    # per-row validity: row j sees exactly what the sequential step at
+    # pos + j sees (its own line included — the write-then-attend order)
+    valid = t_idx[None, None, :] <= posr[:, :, None]  # (b, sq, t)
+    if window:
+        valid = valid | (posr[:, :, None] >= cache_len)
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None]
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    if v_scale_eff is not None:
+        vs_h = jnp.moveaxis(v_scale_eff, 3, 1)
+        vs_h = vs_h if g == 1 else jnp.repeat(vs_h, g, axis=1)
+        w = w * vs_h.astype(w.dtype)
+    out = jnp.einsum("bhjt,bjthk->bjhk", w, v_exp)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), entries
+
+
+def verify_cache_commit(cache, entries, pos, n_commit, *, stacked: bool = False):
+    """Commit the accepted prefix of a verify block: rows ``j < n_commit[b]``
+    of ``entries`` land at their ring slots; rejected rows write back the
+    slot's prior content bit-for-bit (gather-then-select), so rollback is a
+    no-op write — the cache after commit equals the sequential step loop's
+    after feeding exactly the accepted tokens.
+
+    entries: per-buffer (b, sq, ...) from :func:`attention_verify`, or
+    (L, b, sq, ...) with ``stacked=True`` (uniform layer stacks — one
+    scatter per buffer covers every layer plane); pos / n_commit: (b,).
+    Rows whose slot wraps past a dense cache's capacity are only ever
+    rejected rows (the scheduler truncates ``n_commit`` by the slot
+    budget), and their write-back-old is harmless by construction.
+    """
+    t_axis = 2 if stacked else 1
+    cache_len = cache["k"].shape[t_axis]
+    lead = 1 if stacked else 0
+    b, sq = entries["k"].shape[lead], entries["k"].shape[lead + 1]
+    pos = jnp.asarray(pos, jnp.int32)
+    n_commit = jnp.asarray(n_commit, jnp.int32)
+    offs = jnp.arange(sq, dtype=jnp.int32)
+    slots = (pos[:, None] + offs[None, :]) % cache_len  # (b, sq)
+    keep = offs[None, :] < n_commit[:, None]  # (b, sq)
+    rows = jnp.arange(b)[:, None]
+    out = dict(cache)
+    for name, new in entries.items():
+        buf = cache[name]
+        if stacked:
+            old = buf[:, rows, slots]  # (L, b, sq, ...)
+            kb = keep.reshape((1, b, sq) + (1,) * (new.ndim - 3))
+            sel = jnp.where(kb, new.astype(buf.dtype), old)
+            out[name] = buf.at[:, rows, slots].set(sel)
+        else:
+            old = buf[rows, slots]  # (b, sq, ...)
+            kb = keep.reshape((b, sq) + (1,) * (new.ndim - 2))
+            sel = jnp.where(kb, new.astype(buf.dtype), old)
+            out[name] = buf.at[rows, slots].set(sel)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -58,6 +58,10 @@ __all__ = [
     "init_pool_state",
     "prefill_into_slots",
     "decode_slots_scan",
+    "decode_verify_step",
+    "commit_verify_cache",
+    "draft_ngram",
+    "decode_slots_spec_scan",
     "sample_tokens",
     "param_count",
 ]
@@ -1045,6 +1049,369 @@ def decode_slots_scan(params, cfg: ModelConfig, cache, tok, pos, active,
         remaining,
         cache,
     ) + tuple(fin[5:])
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: draft-and-verify over the slot pool
+# ---------------------------------------------------------------------------
+
+
+def _validate_spec_cfg(cfg: ModelConfig, *, what: str = "speculative decode"):
+    """Speculation covers the cache families the exactness contract names
+    (dense / ring / int8 KV): attention-only decoder stacks, greedy, no MoE
+    routing (sequence-level capacity breaks per-row independence) and no
+    recurrent state (SSM/RG-LRU steps cannot be verified position-parallel
+    without replaying the recurrence)."""
+    bad = [b for b in cfg.blocks if b not in ("global", "window")]
+    if bad or cfg.moe is not None or cfg.kind != "decoder":
+        raise ValueError(
+            f"{what} supports attention-only decoder LMs "
+            f"(dense/ring/int8 KV caches); got kind={cfg.kind!r}, "
+            f"blocks={tuple(cfg.blocks)!r}, moe={cfg.moe is not None}"
+        )
+
+
+def _layer_verify(p, cfg, block, x, cache, pos, *, layer_idx=None, levels=None):
+    """One decoder layer over a (b, sq) verify block — the multi-row twin of
+    :func:`_layer_decode`'s attention branch.  Reads the cache, never writes
+    it; returns (x, entries) with the layer's in-flight cache lines for
+    :func:`commit_verify_cache`."""
+    if block not in ("global", "window"):
+        raise ValueError(f"verify step reached non-attention block {block!r}")
+    h = _norm(p, "ln1", x, cfg, levels)
+    h, entries = attn.attention_verify(
+        p["attn"], cfg, h, cache, pos,
+        window=cfg.window if block == "window" else None,
+        layer_idx=layer_idx, norm_levels=levels,
+    )
+    x = x + h
+    h = _norm(p, "ln2", x, cfg, levels)
+    h = mlp_apply(p["mlp"], cfg, h)
+    return x + h, entries
+
+
+def decode_verify_step(params, cfg: ModelConfig, cache, tokens, pos, *,
+                       unit_levels=None):
+    """One draft-verify forward: score all ``sq = k+1`` candidate rows per
+    slot against the cache in a single dispatch, committing NOTHING.
+
+    tokens: (b, sq) int32 — column 0 the committed next token each slot
+    would feed, columns 1.. its drafts; pos: (b,) the position of column 0.
+    Returns (logits (b, sq, vocab), entries): row ``j``'s logits are
+    bit-identical to sequential :func:`decode_step` at position ``pos + j``
+    after feeding rows ``0..j-1`` (see ``attention_verify``), and
+    ``entries`` carries every layer's in-flight cache lines (a stacked tree
+    for uniform layer stacks, a per-layer list otherwise) for
+    :func:`commit_verify_cache` once the accepted prefix is known.
+
+    ``unit_levels`` as in :func:`decode_step`: per-slot ladder rungs apply
+    to every row of the slot — a demoted slot's row 0 is bit-identical to
+    its sequential demoted step, which is what keeps "speculation disabled"
+    equal to "acceptance clamped to zero".
+    """
+    _validate_spec_cfg(cfg, what="decode_verify_step")
+    dt = _act_dtype(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+    b, sq = tokens.shape
+    x = jnp.take(params["embed"].astype(dt), tokens, axis=0)
+    x = constrain(x, ("batch", "seq", "embed"))
+    if cfg.pos == "sinusoidal":
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=jnp.float32)
+        posr = pos[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+        ang = posr.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2 * i / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe.astype(dt)
+
+    blocks = cfg.blocks
+    if cfg.uniform:
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(x, layer):
+            p, i = layer
+            x, entries = _layer_verify(
+                p, cfg, blocks[0], x, cache, pos, layer_idx=i, levels=unit_levels
+            )
+            return x, entries
+
+        x, entries = jax.lax.scan(body, x, (params["layers"], idxs))
+    else:
+        entries = []
+        for p, bk, c in zip(params["layers"], blocks, cache):
+            x, e = _layer_verify(p, cfg, bk, x, c, pos, levels=unit_levels)
+            entries.append(e)
+
+    x = _norm(params, "ln_f", x, cfg, unit_levels)
+    unembed = (params["embed"].T if cfg.tie_embeddings else params["unembed"]).astype(dt)
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits[..., : cfg.vocab], entries
+
+
+def commit_verify_cache(cfg: ModelConfig, cache, entries, pos, n_commit):
+    """Commit the accepted prefix of a verify block into every layer's cache:
+    rows ``j < n_commit[b]`` land at their ring slots, rejected rows write
+    the slot's prior content back bit-for-bit (rollback = the write never
+    happened).  ``entries`` is :func:`decode_verify_step`'s second output."""
+    if cfg.uniform:
+        return attn.verify_cache_commit(cache, entries, pos, n_commit, stacked=True)
+    return [
+        attn.verify_cache_commit(c, e, pos, n_commit)
+        for c, e in zip(cache, entries)
+    ]
+
+
+def draft_ngram(hist, tok, pos, k: int):
+    """Self-drafting n-gram / prompt lookup: propose the ``k`` tokens that
+    followed the most recent prior occurrence of ``tok`` in the slot's fed
+    history.  hist: (b, H) int32 — position ``p`` holds the token fed at
+    step ``p`` for every ``p < pos[b]``; tok: (b,) the committed token about
+    to be fed at ``pos``.  Draft positions past the written history (and
+    slots with no match at all) fall back to repeating ``tok`` — greedy
+    decode of small models loves short cycles, so the repeat is a decent
+    period-1 guess.  Draft quality only moves the acceptance rate; row 0 of
+    the verify block is always the committed token, so a bad draft can never
+    cost correctness, only speed."""
+    b, H = hist.shape
+    idx = jnp.arange(H)
+    cand = (hist == tok[:, None]) & (idx[None, :] < pos[:, None])
+    p_star = jnp.max(jnp.where(cand, idx[None, :], -1), axis=1)  # (b,), -1 = none
+    didx = p_star[:, None] + jnp.arange(1, k + 1, dtype=jnp.int32)[None, :]
+    drafts = jnp.take_along_axis(hist, jnp.clip(didx, 0, H - 1), axis=1)
+    usable = (p_star[:, None] >= 0) & (didx < pos[:, None])
+    return jnp.where(usable, drafts, tok[:, None]).astype(jnp.int32)
+
+
+def decode_slots_spec_scan(params, cfg: ModelConfig, cache, tok, pos, active,
+                           remaining, hist, n_steps: int, *, k: int,
+                           eos_id=None, with_health: bool = False,
+                           logits_hook=None, unit_levels=None,
+                           spec_disable=None, canary_stride: int = 0,
+                           canary_offset=None, draft_params=None,
+                           draft_cfg=None, draft_cache=None):
+    """Draft-and-verify slot decode: ``n_steps`` speculative steps under one
+    ``lax.scan``, each committing 1..k+1 tokens per active slot.
+
+    Per step each active slot (i) drafts ``k`` candidates — self-drafting
+    n-gram lookup over ``hist`` by default, or greedy continuation of a
+    small draft model when ``draft_params``/``draft_cfg``/``draft_cache``
+    are given — (ii) verifies the block ``[tok, drafts]`` in one
+    :func:`decode_verify_step` forward, (iii) accepts the longest prefix of
+    drafts agreeing with the verify argmaxes (truncated by the slot's
+    budget and the first EOS among committed rows), and (iv) commits
+    exactly the accepted rows' cache lines — rejected rows roll back to the
+    pre-step cache content bit-for-bit.  Greedy only by construction: the
+    acceptance rule compares argmaxes, so the emitted stream equals
+    :func:`decode_slots_scan`'s token-for-token (the headline contract,
+    enforced by tests/models/test_spec_decode.py).
+
+    hist: (b, H) int32 fed-token history (prompt + emissions at positions
+    [0, pos)) — the n-gram draft source, maintained in-scan; writes past H
+    are dropped (drafting then degrades gracefully for ring stacks that
+    outlive the buffer).  ``spec_disable`` (b,) bool clamps acceptance to 0
+    for flagged slots (demoted rungs): they advance exactly one row — row 0
+    IS the sequential step — per spec step.  ``with_health`` latches
+    ``bad``/``mx`` over committed rows only (the sequential logit set).
+    ``canary_stride`` fires the shadow-exact canary on row 0 of the block —
+    always an accepted position, never a rejected draft — against the
+    pre-step cache, on the spec-step clock (``canary_offset`` continues it
+    across chunks).
+
+    Returns (toks (b, n_steps*(k+1)), emitted (b, n_steps*(k+1)) bool, tok,
+    pos, active, remaining, cache, hist, accepted (b,) i32 drafts accepted,
+    spec_steps (b,) i32 active steps) — then ``draft_cache`` when drafting
+    with a model, then health / canary extras as in
+    :func:`decode_slots_scan`.  Emitted tokens are the tokens FED, exactly
+    the sequential convention, so ``toks[emitted]`` concatenates across
+    chunks of either scan.
+    """
+    _validate_spec_cfg(cfg)
+    if k < 1:
+        raise ValueError(f"speculation needs k >= 1 draft tokens, got k={k}")
+    if "window" in cfg.blocks and k + 1 > cfg.window:
+        raise ValueError(
+            f"verify block k+1={k + 1} exceeds the sliding window "
+            f"({cfg.window}); pick k <= window - 1"
+        )
+    use_draft = draft_params is not None
+    if use_draft:
+        if draft_cfg is None or draft_cache is None:
+            raise ValueError("draft-model speculation needs draft_params, "
+                             "draft_cfg and draft_cache together")
+        _validate_spec_cfg(draft_cfg, what="draft model")
+        if draft_cfg.vocab != cfg.vocab:
+            raise ValueError(
+                f"draft vocab {draft_cfg.vocab} != target vocab {cfg.vocab}"
+            )
+    pos = jnp.asarray(pos, jnp.int32)
+    active = jnp.asarray(active, bool)
+    remaining = jnp.asarray(remaining, jnp.int32)
+    hist = jnp.asarray(hist, jnp.int32)
+    sq = k + 1
+    canary = bool(canary_stride)
+    if canary:
+        ecfg = exact_twin(cfg)
+        offset = jnp.asarray(0 if canary_offset is None else canary_offset, jnp.int32)
+    if unit_levels is not None:
+        if cfg.sqrt_ladder is None:
+            raise ValueError("unit_levels requires cfg.sqrt_ladder to be set")
+        unit_levels = jnp.asarray(unit_levels, jnp.int32)
+    if spec_disable is not None:
+        spec_disable = jnp.asarray(spec_disable, bool)
+    b = tok.shape[0]
+    offs = jnp.arange(sq, dtype=jnp.int32)
+    rows_b = jnp.arange(b)[:, None]
+
+    def step(carry, i):
+        cache, tok, pos, active, remaining, hist, acc_cnt, step_cnt = carry[:8]
+        tail = 8
+        if use_draft:
+            dcache = carry[tail]
+            tail += 1
+        if with_health:
+            bad, mx = carry[tail], carry[tail + 1]
+            tail += 2
+        if canary:
+            cc, cd, cmr, crs = carry[tail:tail + 4]
+
+        # --- draft k candidates
+        if use_draft:
+            def dstep(c2, j):
+                dc2, t2 = c2
+                dlg, dc2 = decode_step(draft_params, draft_cfg, dc2, t2, pos + j)
+                nx2 = jnp.argmax(dlg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                return (dc2, nx2), nx2[:, 0]
+
+            # the drafting pass runs on a throwaway copy of the draft cache;
+            # the committed prefix re-lands below through the same
+            # verify/commit path the target uses, so the draft cache tracks
+            # committed tokens only
+            _, drafts_t = jax.lax.scan(
+                dstep, (dcache, tok), jnp.arange(k, dtype=jnp.int32)
+            )
+            drafts = jnp.moveaxis(drafts_t, 0, 1)  # (b, k)
+        else:
+            drafts = draft_ngram(hist, tok[:, 0], pos, k)
+
+        # --- one batched verify forward over [tok, drafts]
+        block = jnp.concatenate([tok, drafts], axis=1)  # (b, sq)
+        logits, entries = decode_verify_step(
+            params, cfg, cache, block, pos, unit_levels=unit_levels
+        )
+        lg = logits.astype(jnp.float32)  # (b, sq, vocab)
+        if logits_hook is not None:
+            # the fault model's injection point, applied per verify row —
+            # committed rows see exactly what their sequential step would
+            lg = jax.vmap(logits_hook, in_axes=1, out_axes=1)(lg)
+        out_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # (b, sq) greedy
+
+        # --- longest agreeing prefix, then budget / EOS truncation
+        agree = drafts == out_tok[:, :-1]  # (b, k)
+        acc = jnp.sum(jnp.cumprod(agree.astype(jnp.int32), axis=1), axis=1)
+        if spec_disable is not None:
+            acc = jnp.where(spec_disable, 0, acc)
+        n_flow = jnp.minimum(acc + 1, jnp.maximum(remaining, 1))
+        if eos_id is not None:
+            is_eos = block == eos_id
+            n_flow = jnp.where(
+                jnp.any(is_eos, axis=1),
+                jnp.minimum(n_flow, jnp.argmax(is_eos, axis=1) + 1),
+                n_flow,
+            )
+        n_commit = jnp.where(active, n_flow, 0)  # (b,)
+        commit_mask = offs[None, :] < n_commit[:, None]  # (b, sq)
+
+        if canary:
+            fire = ((offset + i) % canary_stride) == 0
+
+            def shadow(op):
+                # row 0 is ALWAYS an accepted position: the shadow verifies
+                # a token the stream commits, never a rejected draft, from
+                # the same pre-commit cache the verify forward read
+                c, t, p, served = op
+                el, _ = decode_step(params, ecfg, c, t, p)
+                el = el[:, -1].astype(jnp.float32)
+                agree_c = jnp.argmax(served, axis=-1) == jnp.argmax(el, axis=-1)
+                ed = jnp.abs(served - el)
+                ref = jnp.abs(el)
+                rel = (jnp.max(ed, axis=-1)
+                       / jnp.maximum(jnp.max(ref, axis=-1), 1e-20))
+                red = jnp.mean(ed / jnp.maximum(ref, 1e-20), axis=-1)
+                return agree_c, rel, red
+
+            def no_shadow(op):
+                b_ = op[3].shape[0]
+                return (jnp.ones((b_,), bool), jnp.zeros((b_,), jnp.float32),
+                        jnp.zeros((b_,), jnp.float32))
+
+            agree_c, rel, red = jax.lax.cond(
+                fire, shadow, no_shadow, (cache, tok, pos, lg[:, 0])
+            )
+            upd = fire & active
+            cc = cc + upd.astype(jnp.int32)
+            cd = cd + (upd & ~agree_c).astype(jnp.int32)
+            cmr = jnp.maximum(cmr, jnp.where(upd, rel, 0.0))
+            crs = crs + jnp.where(upd, red, 0.0)
+
+        if with_health:
+            # committed rows ARE the sequential logit set; rejected-draft
+            # rows never existed in the sequential stream, so they must not
+            # latch the detectors
+            finite = jnp.all(jnp.isfinite(lg), axis=-1)  # (b, sq)
+            bad = bad | jnp.any(commit_mask & ~finite, axis=1)
+            row_mx = jnp.max(jnp.abs(lg), axis=-1)
+            mx = jnp.maximum(mx, jnp.max(jnp.where(commit_mask, row_mx, 0.0), axis=1))
+
+        # --- commit accepted rows; roll back the rest
+        cache = commit_verify_cache(cfg, cache, entries, pos, n_commit)
+        if use_draft:
+            _, d_entries = decode_verify_step(draft_params, draft_cfg, dcache, block, pos)
+            dcache = commit_verify_cache(draft_cfg, dcache, d_entries, pos, n_commit)
+        hidx = pos[:, None] + offs[None, :]
+        hist = hist.at[rows_b, jnp.where(commit_mask, hidx, hist.shape[1])].set(
+            block, mode="drop"
+        )
+
+        # --- scheduler bookkeeping, row n_commit-1 is the last token fed
+        last = jnp.clip(n_commit - 1, 0, k)
+        nxt = jnp.take_along_axis(out_tok, last[:, None], axis=1)  # (b, 1)
+        fed_last = jnp.take_along_axis(block, last[:, None], axis=1)[:, 0]
+        remaining = remaining - n_commit
+        still = active & (remaining > 0)
+        if eos_id is not None:
+            still = still & (fed_last != eos_id)
+        new_pos = pos + n_commit
+        new_tok = jnp.where(active[:, None], nxt, tok)
+        acc_cnt = acc_cnt + jnp.maximum(n_commit - 1, 0)
+        step_cnt = step_cnt + active.astype(jnp.int32)
+        out = [cache, new_tok, new_pos, still, remaining, hist, acc_cnt, step_cnt]
+        if use_draft:
+            out += [dcache]
+        if with_health:
+            out += [bad, mx]
+        if canary:
+            out += [cc, cd, cmr, crs]
+        return tuple(out), (block, commit_mask)
+
+    carry0 = [cache, tok, pos, active, remaining, hist,
+              jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32)]
+    if use_draft:
+        carry0 += [draft_cache]
+    if with_health:
+        carry0 += [jnp.zeros(b, bool), jnp.zeros(b, jnp.float32)]
+    if canary:
+        carry0 += [
+            jnp.zeros(b, jnp.int32), jnp.zeros(b, jnp.int32),
+            jnp.zeros(b, jnp.float32), jnp.zeros(b, jnp.float32),
+        ]
+    fin, (blocks_t, emits_t) = jax.lax.scan(
+        step, tuple(carry0), jnp.arange(n_steps, dtype=jnp.int32)
+    )
+    toks = jnp.moveaxis(blocks_t, 0, 1).reshape(b, n_steps * sq)
+    emitted = jnp.moveaxis(emits_t, 0, 1).reshape(b, n_steps * sq)
+    cache, tok, pos, active, remaining, hist = fin[:6]
+    return (toks, emitted, tok, pos, active, remaining, cache, hist,
+            fin[6], fin[7]) + tuple(fin[8:])
 
 
 def precompute_cross(params, cfg: ModelConfig, audio):

@@ -7,11 +7,22 @@ count at first init, so this must run at conftest import time — before any
 test module is collected.  Single-device tests are unaffected: unsharded
 jit still places everything on device 0, and the dry-run smoke test strips
 XLA_FLAGS from its subprocess environment anyway.
+
+Also puts tests/models on sys.path so every suite can import the shared
+staggered-vs-solo parity harness as ``import parity`` (docs/testing.md) —
+the tests directory is not a package, so a plain path entry is the
+portable way to share helpers across test subdirectories.
 """
 import os
+import sys
+from pathlib import Path
 
 _flags = os.environ.get("XLA_FLAGS", "")
 if "--xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = (
         "--xla_force_host_platform_device_count=4 " + _flags
     ).strip()
+
+_helpers = str(Path(__file__).resolve().parent / "models")
+if _helpers not in sys.path:
+    sys.path.insert(0, _helpers)

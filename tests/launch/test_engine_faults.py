@@ -9,17 +9,21 @@ Pins the three acceptance properties of the fault-tolerance layer:
 * a zero-fault run with detectors enabled is token-exact against the solo
   parity reference (the detectors only add reductions, never perturb the
   decode carry).
+
+Request traces and solo references ride the shared parity harness in
+tests/models/parity.py (docs/testing.md).
 """
 import dataclasses
 
 import jax
 import numpy as np
+import parity
 import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import FaultConfig
 from repro.core.faults import DispatchFault
-from repro.launch.engine import STATUSES, Engine, Request, solo_generate
+from repro.launch.engine import STATUSES, Engine, solo_generate
 from repro.models import lm
 
 
@@ -30,30 +34,15 @@ def setup():
     return cfg, params
 
 
-def _requests(cfg, n, *, prompts=(3, 5), gens=(2, 4, 7), seed=0):
-    rng = np.random.RandomState(seed)
-    return [
-        Request(
-            uid=i,
-            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
-                np.int32
-            ),
-            max_new_tokens=int(rng.choice(gens)),
-        )
-        for i in range(n)
-    ]
-
-
-def _fresh(reqs):
-    return [dataclasses.replace(r) for r in reqs]
+_requests = parity.random_requests
+_fresh = parity.fresh
 
 
 def _exact_solo(params, cfg, req, cache_len=24):
     """The fault-free exact-datapath reference a degraded request must hit."""
-    return solo_generate(
-        params, lm.exact_twin(cfg), req.prompt, req.max_new_tokens,
-        cache_len=cache_len,
-    )
+    return parity.solo_reference(
+        params, lm.exact_twin(cfg), [req], cache_len=cache_len
+    )[req.uid]
 
 
 def test_zero_fault_detectors_token_exact(setup):

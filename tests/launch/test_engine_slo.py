@@ -7,11 +7,16 @@ stride at ∞ (``canary_stride=None``) the engine's tokens are BIT-EXACT vs
 today's engine.  Under seeded high-bit ``sqrt_man`` pressure the guarded
 engine must demote, and fresh requests admitted into demoted (exact-rung)
 slots must match the solo exact-datapath run token-for-token.
+
+Request traces ride the shared parity harness in tests/models/parity.py
+(docs/testing.md); this suite pins its own generation buckets.
 """
 import numpy as np
 import pytest
 
 jax = pytest.importorskip("jax")
+
+import parity
 
 from repro.configs import get_smoke_config
 from repro.core.faults import FaultConfig
@@ -30,17 +35,8 @@ def setup():
 
 def _requests(cfg, n, *, seed=0, prompts=(3, 5), gens=(4, 6)):
     # all due at t=0: deterministic admission order and chunk contents
-    rng = np.random.RandomState(seed)
-    return [
-        Request(
-            uid=i,
-            prompt=rng.randint(0, cfg.vocab, size=int(rng.choice(prompts))).astype(
-                np.int32
-            ),
-            max_new_tokens=int(rng.choice(gens)),
-        )
-        for i in range(n)
-    ]
+    return parity.random_requests(cfg, n, seed=seed, prompts=prompts,
+                                  gens=gens)
 
 
 # the seeded pressure every demotion test uses: a pinned high mantissa bit

@@ -1,0 +1,264 @@
+"""Speculative decoding on the Engine: exactness under serving, and the
+cross-feature matrix (docs/serving.md §Speculative decoding).
+
+The lm-level contract (tests/models/test_spec_decode.py) says greedy spec ==
+greedy non-spec bitwise; this suite holds the Engine to it while the OTHER
+serving features are live:
+
+* × fault quarantine — a detector-tripped slot discards its speculative
+  emissions and the request degrades to the exact solo path, bit-exact;
+* × accuracy SLO — canaries fire on row 0 of the verify block (always an
+  accepted position, never a rejected draft) and stay read-only on a clean
+  run; a demoted slot decodes non-speculatively (acceptance clamped to 0)
+  yet still serves the demoted rung's exact tokens;
+* × snapshot/resume — a kill mid-speculation resumes with the n-gram
+  history rebuilt from slot metadata and lands on token parity with an
+  uninterrupted run.
+
+All scenario plumbing (seeded traces, per-uid solo parity) rides the shared
+harness in tests/models/parity.py (docs/testing.md).
+"""
+import jax
+import parity
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import FaultConfig
+from repro.launch.engine import AccuracySLO, Engine, SpecConfig
+from repro.models import lm
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("qwen3-4b", sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _spec_engine(params, cfg, *, k=3, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("cache_len", 24)
+    kw.setdefault("chunk", 3)
+    spec_kw = {key: kw.pop(key) for key in ("draft",) if key in kw}
+    return Engine(params, cfg, spec=SpecConfig(k=k, **spec_kw), **kw)
+
+
+# -- exactness under serving ------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,quantized", [
+    ("qwen3-4b", False), ("qwen3-4b", True), ("gemma3-1b", False),
+])
+def test_spec_engine_matches_solo(arch, quantized):
+    cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+    params, _ = lm.init(cfg, jax.random.key(0))
+    reqs = parity.random_requests(cfg, 5, gens=(2, 4, 7))
+    eng = _spec_engine(params, cfg, quantized_kv=quantized)
+    done = eng.run(parity.fresh(reqs))
+    parity.assert_matches_solo(done, params, cfg, reqs, quantized=quantized)
+    assert eng.stats["spec_steps"] > 0
+
+
+def test_spec_engine_matches_nonspec_engine_and_reports_stats(setup):
+    """Same trace through a speculative engine and its non-speculative twin:
+    identical token streams, plus the acceptance accounting the spec lane
+    promises (per-run stats and per-completion accepted_per_step)."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 6, seed=3)
+    base = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3)
+    spec = _spec_engine(params, cfg)
+    done_b = base.run(parity.fresh(reqs))
+    done_s = spec.run(parity.fresh(reqs))
+    parity.assert_same_tokens(done_s, done_b, label_a="spec", label_b="non-spec")
+    st = spec.stats
+    assert st["spec_steps"] > 0 and st["spec_accepted"] >= 0
+    assert 0.0 <= st["accepted_per_step"] <= spec.spec.k
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert "spec_steps" not in base.stats
+    for c in done_s.values():
+        assert c.spec_steps > 0
+        assert 0.0 <= c.accepted_per_step <= spec.spec.k
+    for c in done_b.values():
+        assert c.spec_steps == 0 and c.accepted_per_step == 0.0
+
+
+def test_spec_draft_model_engine_matches_solo(setup):
+    """Model drafting (draft == target here, the acceptance ceiling): still
+    bit-exact, and acceptance is near-perfect since the drafter IS the
+    verifier."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 4, seed=5, gens=(4, 6))
+    eng = _spec_engine(params, cfg, draft="model", draft_model=(params, cfg))
+    done = eng.run(parity.fresh(reqs))
+    parity.assert_matches_solo(done, params, cfg, reqs)
+    # every draft agrees with the verifier except where budget/EOS truncate
+    assert eng.stats["accepted_per_step"] > 1.0
+
+
+# -- × fault quarantine -----------------------------------------------------
+
+
+def test_spec_quarantined_slot_degrades_to_exact(setup):
+    """Detector-tripped speculative slots discard their emissions and the
+    request re-serves on the exact solo path — same degradation contract as
+    the non-spec engine, token-exact vs the exact twin's solo run."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 4, seed=1)
+    eng = _spec_engine(
+        params, cfg,
+        faults=FaultConfig("logit_nan", rate=1.0, seed=3),
+    )
+    done = eng.run(parity.fresh(reqs))
+    ecfg = lm.exact_twin(cfg)
+    assert eng.stats["faults_detected"] > 0
+    parity.assert_matches_solo(done, params, ecfg, reqs, status="degraded")
+
+
+# -- × accuracy SLO ---------------------------------------------------------
+
+
+def test_spec_canary_reads_only_on_clean_run(setup):
+    """Canaries fire on row 0 of the verify block — an accepted position —
+    and are read-only: with budgets too loose to ever demote, the spec
+    engine with canaries emits exactly the no-SLO spec engine's tokens
+    while the shadow checks run."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 5, seed=2, gens=(4, 6))
+    plain = _spec_engine(params, cfg)
+    guarded = _spec_engine(
+        params, cfg,
+        slo=AccuracySLO(canary_stride=2, rel_err_budget=1e6,
+                        divergence_budget=None, promote_after=None),
+    )
+    done_p = plain.run(parity.fresh(reqs))
+    done_g = guarded.run(parity.fresh(reqs))
+    parity.assert_same_tokens(done_g, done_p, label_a="canaried",
+                              label_b="plain")
+    assert guarded.stats["canary_checks"] > 0
+    assert guarded.unit_levels == (0, 0)  # nothing demoted
+    # a canary never audits a rejected draft: every check fired on a spec
+    # step (row 0), so per-slot checks cannot exceed per-slot spec steps
+    for c in done_g.values():
+        assert c.canary_checks <= c.spec_steps
+
+
+def test_spec_demoted_slot_decodes_nonspec_and_exact(setup):
+    """Sqrt-unit pressure demotes both slots to the exact rung; demoted
+    slots clamp acceptance to zero (non-speculative decode) and requests
+    admitted AFTER demotion serve the exact rung's solo tokens bitwise."""
+    cfg, params = setup
+    pressure = FaultConfig("sqrt_man", 1.0, seed=7, bit=21)
+    guard = AccuracySLO(canary_stride=2, rel_err_budget=0.05,
+                        divergence_budget=0, promote_after=None)
+    eng = _spec_engine(params, cfg, faults=pressure, slo=guard)
+    eng.run(parity.fresh(parity.random_requests(cfg, 4, seed=4)))
+    assert eng.unit_levels == (1, 1), "pressure should demote both slots"
+    demoted_steps = eng.stats["spec_steps"]
+
+    # probes admitted into the demoted (exact-rung, fault-free) slots
+    probes = parity.random_requests(cfg, 4, seed=9, gens=(4, 6))
+    done = eng.run(parity.fresh(probes))
+    ecfg = lm.exact_twin(cfg)
+    parity.assert_matches_solo(done, params, ecfg, probes)
+    # demoted slots still count spec steps (the step ran, acceptance was
+    # clamped) but accept zero drafts
+    assert eng.stats["spec_steps"] > 0
+    assert eng.stats["spec_accepted"] == 0
+    assert demoted_steps >= 0
+
+
+# -- × snapshot / resume ----------------------------------------------------
+
+
+def test_spec_kill_resume_token_parity(setup, tmp_path):
+    """Kill the speculative engine at a chunk boundary mid-flight, resume
+    from the autosaved snapshot (spec config restored from snapshot meta,
+    n-gram history rebuilt from slot metadata): the merged completions are
+    token-identical to an uninterrupted run."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 5, seed=6)
+    ref_eng = _spec_engine(params, cfg)
+    ref = ref_eng.run(parity.fresh(reqs))
+
+    eng = _spec_engine(params, cfg, snapshot_dir=tmp_path / "ck",
+                       snapshot_every_chunks=1,
+                       journal=tmp_path / "wal.jsonl")
+    partial = eng.run(parity.fresh(reqs), max_chunks=2)
+    assert eng.stats["killed"]
+
+    eng2 = Engine.resume(params, cfg, tmp_path / "ck",
+                         journal=tmp_path / "wal.jsonl")
+    assert eng2.spec is not None and eng2.spec.k == 3  # restored from meta
+    done = eng2.run()
+    merged = {**partial, **done}
+    parity.assert_same_tokens(merged, ref, label_a="kill+resume",
+                              label_b="uninterrupted")
+
+
+def test_spec_resume_without_spec_override_disables_it(setup, tmp_path):
+    """Resume may override spec=None explicitly — the restored pool decodes
+    non-speculatively and still lands on the same tokens (speculation is a
+    pure throughput feature, so turning it off mid-request is safe)."""
+    cfg, params = setup
+    reqs = parity.random_requests(cfg, 4, seed=8)
+    ref_eng = Engine(params, cfg, num_slots=2, cache_len=24, chunk=3)
+    ref = ref_eng.run(parity.fresh(reqs))
+
+    eng = _spec_engine(params, cfg, snapshot_dir=tmp_path / "ck",
+                       snapshot_every_chunks=1)
+    partial = eng.run(parity.fresh(reqs), max_chunks=2)
+    eng2 = Engine.resume(params, cfg, tmp_path / "ck", spec=None)
+    assert eng2.spec is None
+    done = eng2.run()
+    merged = {**partial, **done}
+    parity.assert_same_tokens(merged, ref, label_a="spec->nonspec resume",
+                              label_b="non-spec")
+
+
+# -- config validation ------------------------------------------------------
+
+
+def test_spec_rejects_sampling(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="greedy-only"):
+        _spec_engine(params, cfg, temperature=0.7)
+
+
+def test_spec_rejects_bad_k():
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        SpecConfig(k=0)
+    with pytest.raises(ValueError, match="draft must be"):
+        SpecConfig(draft="oracle")
+
+
+def test_spec_rejects_window_overflow():
+    cfg = get_smoke_config("gemma3-1b", sqrt_unit="e2afs")  # window 8
+    params, _ = lm.init(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="window"):
+        _spec_engine(params, cfg, k=8)
+
+
+def test_spec_rejects_recurrent_stacks():
+    cfg = get_smoke_config("mamba2-2.7b", sqrt_unit="e2afs")
+    with pytest.raises(ValueError, match="attention-only"):
+        Engine(None, cfg, spec=SpecConfig())
+
+
+def test_spec_model_draft_needs_draft_model(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="draft_model"):
+        _spec_engine(params, cfg, draft="model")
+    with pytest.raises(ValueError, match="no effect"):
+        Engine(params, cfg, draft_model=(params, cfg))
+
+
+def test_spec_model_draft_refuses_snapshots(setup, tmp_path):
+    """The draft-model KV cache does not serialize in snapshot format 1 —
+    refused at construction AND at an explicit snapshot() call."""
+    cfg, params = setup
+    with pytest.raises(ValueError, match="n-gram"):
+        _spec_engine(params, cfg, draft="model", draft_model=(params, cfg),
+                     snapshot_dir=tmp_path, snapshot_every_chunks=1)
+    eng = _spec_engine(params, cfg, draft="model", draft_model=(params, cfg))
+    with pytest.raises(ValueError, match="n-gram"):
+        eng.snapshot(tmp_path)

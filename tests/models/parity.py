@@ -1,0 +1,111 @@
+"""Shared staggered-vs-solo parity harness (docs/testing.md).
+
+Every acceptance suite in this repo leans on the same correctness anchor: a
+request decoded inside a busy, staggered slot pool must emit tokens
+bit-identical to the SAME request run alone through the PR-3 fast path
+(``solo_generate`` — prefill + greedy ``generate_scan``).  This module is
+the one definition of that pattern; test files build their scenario
+(engines, pools, faults, snapshots, speculation) and call these helpers
+instead of re-rolling request generators and per-uid compare loops.
+
+Conventions:
+
+* **Seeded, not fixed** — request traces come from ``random_requests`` with
+  an explicit seed, so a suite can widen coverage by sweeping seeds while
+  staying reproducible.
+* **Requests are single-use** — the Engine mutates nothing in a Request,
+  but suites re-run traces against multiple engines; pass each engine a
+  ``fresh`` copy so accidental aliasing can never couple two runs.
+* **Bit-exact or bust** — greedy parity assertions use
+  ``np.testing.assert_array_equal`` (token ids, not logits): the contract
+  is exactness, so any tolerance would hide exactly the bugs the anchor
+  exists to catch.
+
+The module lives in tests/models but is imported as a plain ``import
+parity`` everywhere (tests/conftest.py puts this directory on sys.path).
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.launch.engine import Request, solo_generate
+
+__all__ = [
+    "random_requests",
+    "fresh",
+    "solo_reference",
+    "assert_matches_solo",
+    "assert_same_tokens",
+]
+
+
+def random_requests(cfg, n, *, seed=0, prompts=(3, 5), gens=(2, 4, 7)):
+    """A seeded request trace: ``n`` requests with prompt lengths and
+    generation budgets drawn from the given buckets (small bucket sets keep
+    the engine's compile set tiny — one admit trace per prompt length)."""
+    rng = np.random.RandomState(seed)
+    return [
+        Request(
+            uid=i,
+            prompt=rng.randint(
+                0, cfg.vocab, size=int(rng.choice(prompts))
+            ).astype(np.int32),
+            max_new_tokens=int(rng.choice(gens)),
+        )
+        for i in range(n)
+    ]
+
+
+def fresh(reqs):
+    """Independent copies of a request trace — one engine run each."""
+    return [dataclasses.replace(r) for r in reqs]
+
+
+def solo_reference(params, cfg, reqs, *, cache_len=24, quantized=False):
+    """{uid: solo tokens} for a trace — each request alone through the fast
+    path, the single reference every staggered run is held to."""
+    return {
+        r.uid: solo_generate(params, cfg, r.prompt, r.max_new_tokens,
+                             cache_len=cache_len, quantized_kv=quantized)
+        for r in reqs
+    }
+
+
+def assert_matches_solo(done, params, cfg, reqs, *, cache_len=24,
+                        quantized=False, status="ok"):
+    """Assert an engine's ``{uid: Completion}`` is bit-exact against each
+    request's solo run.  ``status`` (a string or a set of strings, ``None``
+    to skip) also pins the expected Completion status — parity with the
+    wrong status means the right tokens came off the wrong path."""
+    assert set(done) == {r.uid for r in reqs}, (
+        f"completion uids {sorted(done)} != trace uids "
+        f"{sorted(r.uid for r in reqs)}"
+    )
+    allowed = (None if status is None
+               else {status} if isinstance(status, str) else set(status))
+    ref = solo_reference(params, cfg, reqs, cache_len=cache_len,
+                         quantized=quantized)
+    for r in reqs:
+        c = done[r.uid]
+        if allowed is not None:
+            assert c.status in allowed, (
+                f"uid {r.uid}: status {c.status!r} not in {sorted(allowed)}"
+            )
+        np.testing.assert_array_equal(
+            c.tokens, ref[r.uid],
+            err_msg=f"uid {r.uid}: staggered tokens diverge from solo run",
+        )
+
+
+def assert_same_tokens(done_a, done_b, *, label_a="a", label_b="b"):
+    """Assert two ``{uid: Completion}`` maps emitted identical token
+    streams per uid — e.g. a speculative engine vs its non-speculative
+    twin, or a resumed engine vs an uninterrupted one."""
+    assert set(done_a) == set(done_b), (
+        f"uid sets differ: {label_a}={sorted(done_a)} {label_b}={sorted(done_b)}"
+    )
+    for uid in done_a:
+        np.testing.assert_array_equal(
+            done_a[uid].tokens, done_b[uid].tokens,
+            err_msg=f"uid {uid}: {label_a} tokens != {label_b} tokens",
+        )

@@ -3,7 +3,11 @@ cache, and the parity anchor of the continuous-batching refactor — a request
 decoded in a staggered slot emits tokens bit-identical to a solo
 ``prefill`` + ``generate_scan`` run (greedy, non-MoE), for every cache
 family (dense GQA, sliding-window ring, SSD state, RG-LRU state; float and
-int8 caches)."""
+int8 caches).
+
+This suite drives the lm-level pool primitives by hand (raw arrays, exact
+staggerings); Engine-level suites express the same anchor through the
+shared harness in tests/models/parity.py (docs/testing.md)."""
 import jax
 import jax.numpy as jnp
 import numpy as np

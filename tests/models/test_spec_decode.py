@@ -1,0 +1,376 @@
+"""Speculative decoding: the exactness contract and its rollback primitives.
+
+Headline contract (docs/serving.md §Speculative decoding): greedy
+speculative decode is TOKEN-EXACT vs greedy non-speculative decode — for
+dense, sliding-window ring and int8 KV caches, staggered and solo, at any
+draft quality.  Drafts only move the acceptance rate; row 0 of every verify
+block is the committed token, so correctness never depends on them.
+
+Three layers of enforcement here:
+
+* a deterministic parametrized lane over (cache family, k, stagger, draft
+  source) asserting spec pool output == ``solo_generate`` per request;
+* rollback unit tests on the primitives (``decode_verify_step`` +
+  ``commit_verify_cache``): all-accept equals sequential stepping,
+  all-reject/zero-commit leaves the cache bit-identical, mid-prefix commits
+  continue exactly, ring wraparound rolls back bit-for-bit;
+* a hypothesis property suite (skipped when hypothesis is absent — it runs
+  in CI via the ``test`` extra) randomizing prompt lengths, k, draft
+  quality, cache family and slot stagger in one go.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.engine import solo_generate
+from repro.models import lm
+
+_SETUPS: dict = {}
+
+
+def _setup(arch):
+    if arch not in _SETUPS:
+        cfg = get_smoke_config(arch, sqrt_unit="e2afs")
+        params, _ = lm.init(cfg, jax.random.key(0))
+        _SETUPS[arch] = (cfg, params)
+    return _SETUPS[arch]
+
+
+def _draft_kw(cfg, params, draft, b, cache_len, quantized):
+    """Draft-source kwargs for ``decode_slots_spec_scan``: the self-drafting
+    n-gram (default), a perfect draft model (the target itself — the
+    acceptance ceiling) or a garbage draft model (fresh random init — the
+    acceptance floor).  The exactness property must hold at every rung."""
+    if draft == "ngram":
+        return {}
+    dparams = params if draft == "model-same" else lm.init(
+        cfg, jax.random.key(99))[0]
+    dcache, _ = lm.init_cache(cfg, b, cache_len, quantized=quantized)
+    return dict(draft_params=dparams, draft_cfg=cfg, draft_cache=dcache)
+
+
+class _SpecPool:
+    """Minimal host-side slot pool over the speculative lm primitives (the
+    lm-level twin of test_engine_slots._Pool, plus the fed-token history
+    row the n-gram drafter reads)."""
+
+    def __init__(self, cfg, params, num_slots, cache_len, *, quantized=False):
+        self.cfg, self.params = cfg, params
+        self.cache, _ = lm.init_cache(cfg, num_slots, cache_len,
+                                      quantized=quantized)
+        self.tok = jnp.zeros((num_slots, 1), jnp.int32)
+        self.pos = jnp.zeros((num_slots,), jnp.int32)
+        self.active = jnp.zeros((num_slots,), bool)
+        self.remaining = jnp.zeros((num_slots,), jnp.int32)
+        self.hist = jnp.zeros((num_slots, cache_len), jnp.int32)
+
+    def admit(self, prompt, slot, budget):
+        logits, self.cache = lm.prefill_into_slots(
+            self.params, self.cfg, self.cache, prompt, jnp.asarray([slot])
+        )
+        self.tok = self.tok.at[slot, 0].set(
+            jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        )
+        self.pos = self.pos.at[slot].set(prompt.shape[1])
+        self.active = self.active.at[slot].set(True)
+        self.remaining = self.remaining.at[slot].set(budget)
+        s_w = min(prompt.shape[1], self.hist.shape[1])
+        self.hist = self.hist.at[slot, :s_w].set(prompt[0, :s_w])
+
+    def decode(self, steps, *, k, draft_kw=None, **kw):
+        out = lm.decode_slots_spec_scan(
+            self.params, self.cfg, self.cache, self.tok, self.pos,
+            self.active, self.remaining, self.hist, steps, k=k,
+            **(draft_kw or {}), **kw,
+        )
+        (toks, emitted, self.tok, self.pos, self.active, self.remaining,
+         self.cache, self.hist) = out[:8]
+        self.accepted, self.spec_steps = out[8], out[9]
+        if draft_kw:
+            draft_kw["draft_cache"] = out[10]  # thread it across chunks
+        return np.asarray(toks), np.asarray(emitted)
+
+
+def _spec_vs_solo(arch, *, k, quantized=False, draft="ngram",
+                  plens=(5, 7, 3), budgets=(6, 6, 6), stagger=2,
+                  cache_len=32, seed=1):
+    """Admit one request per slot at ``stagger``-step offsets, decode the
+    pool speculatively to completion, and assert each slot's emitted stream
+    is bit-equal to its solo non-speculative run."""
+    cfg, params = _setup(arch)
+    b = len(plens)
+    rng = np.random.RandomState(seed)
+    prompts = [
+        jnp.asarray(rng.randint(0, cfg.vocab, size=(1, s)).astype(np.int32))
+        for s in plens
+    ]
+    pool = _SpecPool(cfg, params, b, cache_len, quantized=quantized)
+    kw = _draft_kw(cfg, params, draft, b, cache_len, quantized)
+    chunks = []
+    for i in range(b):
+        pool.admit(prompts[i], slot=i, budget=budgets[i])
+        if stagger and i < b - 1:
+            t, e = pool.decode(stagger, k=k, draft_kw=kw)
+            chunks.append((t, e))
+    # enough steps to drain even at zero acceptance (1 token per step)
+    t, e = pool.decode(max(budgets), k=k, draft_kw=kw)
+    chunks.append((t, e))
+    assert not np.asarray(pool.active).any()
+    toks = np.concatenate([t for t, _ in chunks], axis=1)
+    emitted = np.concatenate([e for _, e in chunks], axis=1)
+    for i in range(b):
+        solo = solo_generate(params, cfg, prompts[i], budgets[i],
+                             cache_len=cache_len, quantized_kv=quantized)
+        np.testing.assert_array_equal(
+            toks[i][emitted[i]], solo,
+            err_msg=f"slot {i} (draft={draft}, k={k}): spec != solo greedy",
+        )
+
+
+# -- deterministic parity lane ----------------------------------------------
+
+
+@pytest.mark.parametrize("arch,quantized", [
+    ("qwen3-4b", False),   # dense GQA cache
+    ("qwen3-4b", True),    # int8 cache
+    ("gemma3-1b", False),  # sliding-window ring
+])
+def test_spec_staggered_matches_solo(arch, quantized):
+    _spec_vs_solo(arch, k=3, quantized=quantized)
+
+
+def test_spec_solo_slot_matches_solo():
+    """One request alone in the pool — the stagger-free end of the
+    contract."""
+    _spec_vs_solo("qwen3-4b", k=2, plens=(4,), budgets=(7,), stagger=0)
+
+
+def test_spec_ring_wraparound_matches_solo():
+    """Prompts past the sliding window: the verify block straddles the ring
+    wrap point while drafts are being rejected and re-proposed."""
+    _spec_vs_solo("gemma3-1b", k=3, plens=(12, 3), budgets=(6, 6))
+
+
+@pytest.mark.parametrize("draft", ["model-same", "model-other"])
+def test_spec_draft_model_quality_only_moves_acceptance(draft):
+    """A perfect draft model (the target itself) and a garbage one (random
+    init) both stay token-exact — draft quality moves acceptance, never
+    output."""
+    _spec_vs_solo("qwen3-4b", k=2, draft=draft)
+
+
+@pytest.mark.parametrize("k", [1, 4])
+def test_spec_k_sweep_matches_solo(k):
+    _spec_vs_solo("qwen3-4b", k=k)
+
+
+def test_spec_eos_truncates_commit():
+    """EOS inside a verify block: commits stop at the EOS row, the stream
+    ends exactly where the sequential run's does."""
+    cfg, params = _setup("qwen3-4b")
+    rng = np.random.RandomState(3)
+    prompt = jnp.asarray(rng.randint(0, cfg.vocab, size=(1, 5)).astype(np.int32))
+    solo = solo_generate(params, cfg, prompt, 8, cache_len=32)
+    eos = int(solo[3])  # a token the greedy run actually emits
+    stop = int(np.flatnonzero(solo == eos)[0])
+
+    pool = _SpecPool(cfg, params, 1, 32)
+    pool.admit(prompt, slot=0, budget=8)
+    toks, emitted = pool.decode(8, k=3, eos_id=eos)
+    np.testing.assert_array_equal(toks[0][emitted[0]], solo[: stop + 1])
+    assert not np.asarray(pool.active)[0]
+
+
+# -- rollback primitives ----------------------------------------------------
+
+
+def _verify_fixture(arch, *, quantized=False, prompt_len=4, k=3,
+                    cache_len=24, b=2, seed=0):
+    """A prefilled pool plus the k+1 tokens greedy sequential decode would
+    feed (and their per-step logits and final cache, the bit-exact
+    reference)."""
+    cfg, params = _setup(arch)
+    rng = np.random.RandomState(seed)
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab, size=(b, prompt_len)).astype(np.int32))
+    cache, _ = lm.init_cache(cfg, b, cache_len, quantized=quantized)
+    logits, cache = lm.prefill(params, cfg, cache, prompts,
+                               last_logit_only=True)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    pos = jnp.full((b,), prompt_len, jnp.int32)
+    fed, seq_logits, c, t, p = [tok], [], cache, tok, pos
+    for _ in range(k + 1):
+        lg, c = lm.decode_step(params, cfg, c, t, p)
+        seq_logits.append(np.asarray(lg[:, -1], np.float32))
+        t = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        fed.append(t)
+        p = p + 1
+    block = jnp.concatenate(fed[: k + 1], axis=1)  # (b, k+1)
+    return cfg, params, cache, block, pos, seq_logits, c
+
+
+def _tree_equal(a, b):
+    fa, _ = jax.tree.flatten(a)
+    fb, _ = jax.tree.flatten(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(fa, fb))
+
+
+@pytest.mark.parametrize("arch,quantized", [
+    ("qwen3-4b", False), ("qwen3-4b", True), ("gemma3-1b", False),
+])
+def test_verify_rows_equal_sequential_steps(arch, quantized):
+    """Row j of one verify forward == sequential decode_step at pos+j,
+    bitwise, for every cache family."""
+    cfg, params, cache, block, pos, seq_logits, _ = _verify_fixture(
+        arch, quantized=quantized)
+    vlogits, _ = lm.decode_verify_step(params, cfg, cache, block, pos)
+    vlogits = np.asarray(vlogits, np.float32)
+    for j in range(block.shape[1]):
+        np.testing.assert_array_equal(vlogits[:, j], seq_logits[j])
+
+
+def test_commit_all_accept_equals_sequential_cache():
+    cfg, params, cache, block, pos, _, seq_cache = _verify_fixture("qwen3-4b")
+    _, entries = lm.decode_verify_step(params, cfg, cache, block, pos)
+    full = jnp.full((block.shape[0],), block.shape[1], jnp.int32)
+    committed = lm.commit_verify_cache(cfg, cache, entries, pos, full)
+    assert _tree_equal(committed, seq_cache)
+
+
+@pytest.mark.parametrize("arch,quantized", [
+    ("qwen3-4b", False), ("qwen3-4b", True), ("gemma3-1b", False),
+])
+def test_commit_zero_rows_is_bitwise_noop(arch, quantized):
+    """All-reject (inactive slot): n_commit=0 writes every slot's prior
+    content back bit-for-bit — rollback IS a no-op write."""
+    cfg, params, cache, block, pos, _, _ = _verify_fixture(
+        arch, quantized=quantized)
+    _, entries = lm.decode_verify_step(params, cfg, cache, block, pos)
+    zero = jnp.zeros((block.shape[0],), jnp.int32)
+    committed = lm.commit_verify_cache(cfg, cache, entries, pos, zero)
+    assert _tree_equal(committed, cache)
+
+
+@pytest.mark.parametrize("n", [1, 2])
+def test_commit_mid_prefix_then_sequential_continues_exactly(n):
+    """Mid-prefix reject: commit n rows, step the remainder sequentially —
+    logits and final cache land bitwise on the all-sequential run."""
+    cfg, params, cache, block, pos, seq_logits, seq_cache = _verify_fixture(
+        "qwen3-4b")
+    _, entries = lm.decode_verify_step(params, cfg, cache, block, pos)
+    nv = jnp.full((block.shape[0],), n, jnp.int32)
+    c = lm.commit_verify_cache(cfg, cache, entries, pos, nv)
+    k1 = block.shape[1]
+    t, p = block[:, n:n + 1], pos + n
+    for j in range(n, k1):
+        lg, c = lm.decode_step(params, cfg, c, t, p)
+        np.testing.assert_array_equal(
+            np.asarray(lg[:, -1], np.float32), seq_logits[j])
+        t = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        p = p + 1
+    assert _tree_equal(c, seq_cache)
+
+
+def test_commit_partial_ring_wraparound_rolls_back():
+    """Rollback while the verify block straddles the ring wrap: prompt 12 >
+    window 8 on a cache the block wraps through; rejected rows must restore
+    the wrapped slots bit-for-bit and the continuation stays exact."""
+    cfg, params, cache, block, pos, seq_logits, seq_cache = _verify_fixture(
+        "gemma3-1b", prompt_len=12, cache_len=14, b=1)
+    _, entries = lm.decode_verify_step(params, cfg, cache, block, pos)
+    one = jnp.ones((1,), jnp.int32)
+    c = lm.commit_verify_cache(cfg, cache, entries, pos, one)
+    t, p = block[:, 1:2], pos + 1
+    for j in range(1, block.shape[1]):
+        lg, c = lm.decode_step(params, cfg, c, t, p)
+        np.testing.assert_array_equal(
+            np.asarray(lg[:, -1], np.float32), seq_logits[j])
+        t = jnp.argmax(lg[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        p = p + 1
+    assert _tree_equal(c, seq_cache)
+
+
+def test_draft_ngram_lookup_and_fallback():
+    """The self-drafter: continues the most recent prior occurrence of the
+    current token, falls back to repeating it with no (or truncated)
+    match, and never reads past the written history."""
+    hist = jnp.asarray([
+        [5, 9, 7, 5, 3, 0, 0, 0],   # 5 seen at 0 and 3 -> continue from 3
+        [1, 2, 3, 4, 0, 0, 0, 0],   # no prior 8 -> repeat fallback
+        [6, 2, 6, 0, 0, 0, 0, 0],   # match at 2, but history ends at pos
+    ], jnp.int32)
+    tok = jnp.asarray([5, 8, 6], jnp.int32)
+    pos = jnp.asarray([5, 4, 3], jnp.int32)
+    drafts = np.asarray(lm.draft_ngram(hist, tok, pos, k=2))
+    np.testing.assert_array_equal(drafts[0], [3, 5])  # hist[4], then fallback
+    np.testing.assert_array_equal(drafts[1], [8, 8])  # pure fallback
+    np.testing.assert_array_equal(drafts[2], [6, 6])  # didx >= pos -> fallback
+
+
+def test_spec_rejects_unsupported_stacks():
+    """Recurrent-state and MoE stacks cannot be verified position-parallel;
+    the spec entry points refuse them up front."""
+    cfg, _ = _setup("mamba2-2.7b")
+    with pytest.raises(ValueError, match="attention-only"):
+        lm.decode_verify_step(None, cfg, None, jnp.zeros((1, 2), jnp.int32),
+                              jnp.zeros((1,), jnp.int32))
+
+
+def test_spec_scan_rejects_oversized_block_for_window():
+    cfg, params = _setup("gemma3-1b")  # smoke window = 8
+    with pytest.raises(ValueError, match="window"):
+        lm.decode_slots_spec_scan(
+            params, cfg, None, jnp.zeros((1, 1), jnp.int32),
+            jnp.zeros((1,), jnp.int32), jnp.ones((1,), bool),
+            jnp.ones((1,), jnp.int32), jnp.zeros((1, 8), jnp.int32),
+            1, k=8,
+        )
+
+
+# -- hypothesis property suite ----------------------------------------------
+# Gated per-test (not importorskip at module level — that would skip the
+# deterministic lane above too): the container may lack hypothesis; CI
+# installs it via the 'test' extra and runs the property lane.
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow  # jit-compile-heavy sweep: full lane only
+    @settings(max_examples=12, deadline=None)
+    @given(
+        arch_q=st.sampled_from([
+            ("qwen3-4b", False), ("qwen3-4b", True), ("gemma3-1b", False),
+        ]),
+        k=st.integers(min_value=1, max_value=3),
+        plens=st.lists(st.integers(min_value=2, max_value=9), min_size=1,
+                       max_size=3),
+        budget=st.integers(min_value=1, max_value=7),
+        stagger=st.integers(min_value=0, max_value=3),
+        draft=st.sampled_from(["ngram", "model-same", "model-other"]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_property_greedy_spec_equals_greedy_nonspec(
+            arch_q, k, plens, budget, stagger, draft, seed):
+        """The contract as a property: for ANY (cache family, k, prompt
+        lengths, budget, stagger, draft quality, trace seed), greedy
+        speculative pool output is bit-equal to each request's solo greedy
+        run."""
+        arch, quantized = arch_q
+        _spec_vs_solo(
+            arch, k=k, quantized=quantized, draft=draft, plens=tuple(plens),
+            budgets=(budget,) * len(plens), stagger=stagger, seed=seed,
+        )
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed; the property lane "
+                             "runs in CI via the 'test' extra")
+    def test_property_greedy_spec_equals_greedy_nonspec():
+        pass
